@@ -1,0 +1,98 @@
+"""Beyond-paper: the PAGE-SIZE sweep — the TPU-side dual of the TLB sweep.
+
+The paper sweeps the TLB against a fixed 4-KiB page.  On TPU the page size
+itself is a design knob with a three-way tradeoff this benchmark
+quantifies on real serving traces:
+
+  * translations/token for decode reads (1 per page per step: smaller pages
+    => more SMEM lookups and more kernel grid steps);
+  * internal fragmentation (the allocated-but-unused tail of each
+    sequence's last page: larger pages waste more pool);
+  * VMEM burst efficiency (a page of one KV head is a [page, head_dim]
+    tile; bursts under the 8-sublane tile height waste MXU/VPU issue).
+
+Driven by a synthetic continuous-batching trace (Zipf-ish request lengths),
+using the real VirtualMemory allocator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import VMemConfig, VirtualMemory
+
+HEAD_DIM = 128
+SUBLANE = 8
+POOL_TOKENS = 1 << 16
+
+
+def run_trace(page_size: int, seed: int = 0, n_req: int = 200):
+    rng = np.random.default_rng(seed)
+    vm = VirtualMemory(VMemConfig(
+        page_size=page_size,
+        num_pages=POOL_TOKENS // page_size,
+        max_pages_per_seq=(8192 // page_size) + 2,
+        max_seqs=64,
+    ))
+    lens = np.minimum((rng.pareto(1.2, n_req) + 1) * 64, 4096).astype(int)
+    outs = rng.integers(16, 256, n_req)
+    live: list[tuple[int, int]] = []   # (req_id, remaining)
+    translations = 0
+    decode_tokens = 0
+    frag_samples = []
+    util_samples = []
+    for i, (plen, olen) in enumerate(zip(lens, outs)):
+        # retire the oldest if slots/pages are tight
+        while True:
+            try:
+                vm.map_seq(i, int(plen))
+                break
+            except Exception:
+                if not live:
+                    raise
+                victim, _ = live.pop(0)
+                vm.unmap_seq(victim)
+        live.append((i, int(olen)))
+        # decode loop for the newest request only (trace compression)
+        for t in range(int(olen) // 8):
+            vm.append_tokens(i, 8)
+            # a decode step reads ceil(len/page) pages per sequence
+            translations += -(-vm.seq_len(i) // page_size)
+            decode_tokens += 8
+        # fragmentation snapshot
+        mapped_tokens = sum(vm.seq_len(r) for r, _ in live if vm.has_seq(r))
+        mapped_pages = sum(len(vm.seq(r).pages) for r, _ in live
+                           if vm.has_seq(r))
+        if mapped_pages:
+            frag_samples.append(
+                1.0 - mapped_tokens / (mapped_pages * page_size)
+            )
+            util_samples.append(vm.pool.num_used / vm.pool.num_pages)
+    vm.check_invariants()
+    return {
+        "tx_per_token": translations / max(decode_tokens, 1),
+        "fragmentation": float(np.mean(frag_samples)),
+        "pool_util": float(np.mean(util_samples)),
+        "tile_efficiency": min(1.0, page_size / SUBLANE),
+    }
+
+
+def main() -> list[str]:
+    lines = []
+    print(f"{'page':>5s} {'tx/token':>9s} {'frag%':>7s} {'tile-eff':>9s}")
+    for page in (4, 8, 16, 32, 64, 128):
+        r = run_trace(page)
+        print(f"{page:5d} {r['tx_per_token']:9.2f} "
+              f"{r['fragmentation']*100:6.2f}% {r['tile_efficiency']:9.2f}")
+        lines.append(
+            f"page_sweep_{page},0,"
+            f"tx={r['tx_per_token']:.2f} frag={r['fragmentation']*100:.2f}%"
+        )
+    print("\n16-token pages (= one 4-KiB bf16 burst per KV head, the AXI "
+          "granularity restated) balance translation count against "
+          "fragmentation — the default (DESIGN.md §6.3).")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

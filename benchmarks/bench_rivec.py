@@ -1,0 +1,125 @@
+"""Table 1 reproduction: RiVEC suite, scalar vs vector vs vector-unordered.
+
+The kernels compute real results in vectorized JAX (``rivec_kernels``);
+speedups come from an Ara2 cycle model driven by each kernel's architectural
+Work record.  Model constants (documented, calibrated once against the
+paper's axpy/blackscholes rows, NOT per-cell):
+
+  scalar: 1 element-op/cycle FPU + 4 cycles/element loop+load/store
+          overhead (ld/ld/op/st/addi/bne), transcendental-heavy kernels pay
+          ``scalar_flop_penalty``;
+  vector (2-lane Ara2): 4 element-ops/cycle, 6-cycle issue overhead per
+          vector instruction (dominant for short vectors — canneal),
+          8 B/cycle memory floor;
+  ordered reductions: vl cycles vs vl/4 + log2(vl) unordered (the V vs Vu
+          columns);
+  indexed accesses: +2 cycles/element visible translation latency
+          (per-element MMU requests, paper §3.2 — spmv/canneal/lavaMD);
+  reshuffles: 48 cycles each, unchainable (canneal's EW pathology).
+
+Expected qualitative agreement with the paper: blackscholes highest (~8x),
+axpy/jacobi/somier 3.4-4.3x, canneal < 1x, spmv lowest positive and rising
+with size, geomean ~2.7-3.2x.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+
+from benchmarks.rivec_kernels import KERNELS, SIZES, Work
+
+SCALAR_OVERHEAD_CPE = 4.0
+SCALAR_FLOP_PENALTY = {"blackscholes": 1.7, "swaptions": 1.4}
+VPU_THROUGHPUT = 4.0          # element-ops / cycle (2 lanes)
+ISSUE_OVERHEAD = 6.0          # cycles / vector instruction
+MEM_BYTES_PER_CYCLE = 8.0
+BYTES_PER_ELEM = 12.0         # 2 loads + 1 store, f32
+INDEXED_CPE = 2.0             # visible per-element translation latency
+RESHUFFLE_CYCLES = 48.0
+
+
+def scalar_cycles(name: str, w: Work) -> float:
+    pen = SCALAR_FLOP_PENALTY.get(name, 1.0)
+    return w.elems * (w.flops_per_elem * pen + SCALAR_OVERHEAD_CPE) + \
+        w.scalar_ops
+
+
+def vector_cycles(name: str, w: Work, unordered: bool) -> float:
+    vl = max(w.avg_vl, 1.0)
+    n_instr = w.elems * w.flops_per_elem / vl
+    compute = w.elems * w.flops_per_elem / VPU_THROUGHPUT
+    mem_floor = (w.elems * BYTES_PER_ELEM
+                 / max(w.flops_per_elem, 1.0) ** 0.5) / MEM_BYTES_PER_CYCLE
+    cycles = max(compute, mem_floor) + n_instr * ISSUE_OVERHEAD
+    n_red = w.ordered_red_elems / vl
+    if unordered:
+        cycles += n_red * (vl / VPU_THROUGHPUT / vl + math.log2(max(vl, 2)))
+    else:
+        cycles += n_red * vl  # ordered: element-serial
+    cycles += w.indexed_elems * INDEXED_CPE
+    cycles += w.reshuffles * RESHUFFLE_CYCLES
+    # Amdahl: the fraction of the scalar program that never vectorizes
+    cycles += w.serial_frac * scalar_cycles(name, w)
+    return cycles
+
+
+def run_table() -> list[dict]:
+    rows = []
+    for name, fn in KERNELS.items():
+        row = {"kernel": name}
+        for size in SIZES:
+            t0 = time.perf_counter()
+            out, w = fn(size)
+            jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+            s = scalar_cycles(name, w)
+            v = vector_cycles(name, w, unordered=False)
+            vu = vector_cycles(name, w, unordered=True)
+            row[size] = {
+                "S_cycles": s,
+                "V_speedup": s / v,
+                "Vu_speedup": s / vu,
+                "wall_s": wall,
+            }
+        rows.append(row)
+    return rows
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
+
+
+def main() -> list[str]:
+    rows = run_table()
+    lines = []
+    hdr = f"{'kernel':16s}" + "".join(
+        f" | {s:>7s} V/Vu" for s in SIZES
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for row in rows:
+        cells = "".join(
+            f" | {row[s]['V_speedup']:5.2f}/{row[s]['Vu_speedup']:5.2f}"
+            for s in SIZES
+        )
+        print(f"{row['kernel']:16s}{cells}")
+        for s in SIZES:
+            lines.append(
+                f"rivec_{row['kernel']}_{s},"
+                f"{row[s]['wall_s'] * 1e6:.0f},"
+                f"V={row[s]['V_speedup']:.2f}x Vu={row[s]['Vu_speedup']:.2f}x"
+            )
+    for s in SIZES:
+        gm = geomean([r[s]["V_speedup"] for r in rows])
+        gmu = geomean([r[s]["Vu_speedup"] for r in rows])
+        print(f"{'geomean ' + s:>24s}: V {gm:.2f}x  Vu {gmu:.2f}x "
+              f"(paper: 2.7-3.2x)")
+        lines.append(f"rivec_geomean_{s},0,V={gm:.2f}x Vu={gmu:.2f}x")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

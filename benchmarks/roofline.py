@@ -1,0 +1,76 @@
+"""§Roofline report: aggregate the dry-run cells into the per-(arch x shape
+x mesh) three-term table (EXPERIMENTS.md §Roofline reads this output).
+
+Terms (per device, v5e constants; conventions in launch/hlo_cost.py):
+  compute    = HLO_FLOPs / 197 TFLOP/s
+  memory     = HLO_bytes / 819 GB/s
+  collective = collective_bytes / 50 GB/s per link
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.hlo_analysis import fmt_seconds
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh_filter: str | None = None) -> list[dict]:
+    cells = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return cells
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            r = json.load(f)
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        cells.append(r)
+    return cells
+
+
+def table(cells: list[dict]) -> list[str]:
+    lines = []
+    hdr = (f"{'arch':26s} {'shape':11s} {'mesh':11s} {'st':4s} "
+           f"{'compute':>9s} {'memory':>9s} {'collect':>9s} {'dom':>10s} "
+           f"{'MFU@roof':>8s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in cells:
+        tag = f"{r['arch']:26s} {r['shape']:11s} {r['mesh']:11s}"
+        if r["status"] == "skipped":
+            print(f"{tag} skip  ({r['reason'][:50]})")
+            lines.append(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,skipped")
+            continue
+        if r["status"] != "ok":
+            print(f"{tag} ERR   {r.get('error', '')[:60]}")
+            lines.append(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,ERROR")
+            continue
+        t = r["roofline"]
+        print(f"{tag} ok   {fmt_seconds(t['compute_s']):>9s} "
+              f"{fmt_seconds(t['memory_s']):>9s} "
+              f"{fmt_seconds(t['collective_s']):>9s} {t['dominant']:>10s} "
+              f"{t['roofline_fraction']:8.2%} "
+              f"{t['useful_flops_fraction']:7.2f}")
+        lines.append(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},0,"
+            f"dom={t['dominant']} frac={t['roofline_fraction']:.4f}"
+        )
+    return lines
+
+
+def main() -> list[str]:
+    cells = load_cells()
+    if not cells:
+        print("no dry-run cells found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return ["roofline_missing,0,run dryrun first"]
+    return table(cells)
+
+
+if __name__ == "__main__":
+    main()

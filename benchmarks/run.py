@@ -1,0 +1,56 @@
+"""Benchmark harness: one section per paper table/figure + the roofline.
+
+Prints a ``name,us_per_call,derived`` CSV block at the end (harness
+contract).  Sections:
+  fig2   — matmul VM overhead vs DTLB size x problem size  (bench_tlb_sweep)
+  table1 — RiVEC suite scalar vs vector speedups           (bench_rivec)
+  s31    — scheduler ticks + context switches              (bench_context_switch)
+  c2     — burst vs element translation (+ coalescing)     (bench_translation)
+  roof   — dry-run roofline table                          (roofline)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def section(title: str):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+
+
+def main() -> None:
+    t0 = time.time()
+    csv: list[str] = ["name,us_per_call,derived"]
+
+    section("Fig. 2(b,c,d): matmul VM overhead vs DTLB size")
+    from benchmarks import bench_tlb_sweep
+    csv += bench_tlb_sweep.main()
+
+    section("Table 1: RiVEC suite (S / V / Vu)")
+    from benchmarks import bench_rivec
+    csv += bench_rivec.main()
+
+    section("§3.1: scheduler interrupts + context switches")
+    from benchmarks import bench_context_switch
+    csv += bench_context_switch.main()
+
+    section("C2: translation counts (burst / element / coalesced)")
+    from benchmarks import bench_translation
+    csv += bench_translation.main()
+
+    section("Beyond-paper: page-size sweep (the TPU dual of the TLB sweep)")
+    from benchmarks import bench_page_size
+    csv += bench_page_size.main()
+
+    section("Roofline (from dry-run artifacts)")
+    from benchmarks import roofline
+    csv += roofline.main()
+
+    section(f"CSV (total {time.time() - t0:.0f}s)")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Serving example: continuous batching with paged KV + forced preemption.
+
+A small transformer serves a queue of batched requests through the paged
+virtual-memory engine.  The pool is deliberately undersized, so the engine
+must take page faults (on-demand allocation) and context-switch requests
+out and back in (the paper's §3.1 measurement, reproduced functionally).
+Outputs are verified identical to a run with an abundant pool —
+preemption transparency.
+
+Run:  PYTHONPATH=src python examples/serve_continuous_batching.py
+"""
+
+import copy
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CostModel
+from repro.models import build_model
+from repro.serve import Engine, Request, ServeConfig
+
+
+def make_requests(cfg, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            req_id=i,
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(5, 14))
+            ).astype(np.int32),
+            max_new_tokens=16,
+        )
+        for i in range(n)
+    ]
+
+
+def run(engine_cfg, reqs, model, params):
+    eng = Engine(model, params, engine_cfg)
+    for r in reqs:
+        eng.submit(copy.deepcopy(r))
+    t0 = time.perf_counter()
+    done = eng.run()
+    return eng, done, time.perf_counter() - t0
+
+
+def main() -> None:
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(cfg)
+
+    # deliberately tight pool: 15 usable frames x 4 tokens = 60 tokens
+    tight = ServeConfig(page_size=4, num_pages=16, max_pages_per_seq=16,
+                        max_batch=3)
+    roomy = ServeConfig(page_size=4, num_pages=512, max_pages_per_seq=16,
+                        max_batch=8)
+
+    eng_t, done_t, dt_t = run(tight, reqs, model, params)
+    eng_r, done_r, dt_r = run(roomy, reqs, model, params)
+
+    st = eng_t.stats()
+    cost = CostModel()
+    print("tight pool (preempting):")
+    print(f"  page faults:      {st['counters'].get('page_faults', 0)}")
+    print(f"  preemptions:      {st['counters'].get('preemptions', 0)}")
+    print(f"  restores:         {st['counters'].get('restores', 0)}")
+    sw = st["switch_stats"]
+    print(f"  ctx-switch bytes: {sw['bytes_spilled']} spilled / "
+          f"{sw['bytes_restored']} restored")
+    print(f"  modeled cycles:   {sw['modeled_cycles']:.0f} "
+          f"(paper: ~3.2k/switch for an 8-KiB VRF; ours moves KV pages)")
+    print(f"  modeled seconds @50 MHz: "
+          f"{cost.seconds(sw['modeled_cycles'])*1e3:.2f} ms")
+
+    identical = all(
+        [int(x) for x in done_t[i].output] == [int(x) for x in done_r[i].output]
+        for i in range(len(reqs))
+    )
+    print(f"\npreemption transparency: outputs identical = {identical}")
+    assert identical
+    assert st["counters"].get("preemptions", 0) > 0, "expected preemptions"
+    print(f"(tight {dt_t:.1f}s vs roomy {dt_r:.1f}s wall on CPU interpret)")
+
+
+if __name__ == "__main__":
+    main()

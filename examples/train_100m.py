@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps.
+
+Exercises the full training substrate — synthetic packed data pipeline,
+sharded model (when >1 device), AdamW + cosine schedule + clipping, gradient
+accumulation, async atomic checkpointing, auto-resume — and verifies the
+loss drops substantially below its initial value.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, SyntheticLMStream
+from repro.models import build_model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer
+
+# ~100M params: 12 layers, d=512, vocab 32k
+CFG = ModelConfig(
+    name="lm-100m", family="dense", num_layers=12, d_model=512,
+    num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32_000,
+    head_dim=64, param_dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--accum-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    model = build_model(CFG, remat=True)
+    print(f"params: {CFG.param_count()/1e6:.0f}M")
+    shape = ShapeConfig("ex", args.seq_len, args.global_batch, "train")
+    stream = SyntheticLMStream(CFG, shape, DataConfig(seed=7))
+    opt = AdamWConfig(base_lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(model, opt, ckpt_dir=ckpt_dir, ckpt_every=100,
+                          accum_steps=args.accum_steps)
+        params, opt_state, start = trainer.init_or_restore(
+            jax.random.PRNGKey(0)
+        )
+        batch_fn = lambda s: {k: jnp.asarray(v)
+                              for k, v in stream.batch(s).items()}
+        t0 = time.perf_counter()
+        params, opt_state, hist = trainer.run(
+            params, opt_state, batch_fn, start, args.steps, log_every=25
+        )
+        dt = time.perf_counter() - t0
+    tokens = args.steps * args.global_batch * args.seq_len
+    print(f"\n{args.steps} steps / {tokens/1e6:.1f}M tokens in {dt:.0f}s")
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"lr {h['lr']:.2e}  |g| {h['grad_norm']:.2f}")
+    drop = hist[0]["loss"] - hist[-1]["loss"]
+    print(f"loss drop: {drop:.3f} "
+          f"({hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f})")
+    assert drop > 0.5, "training failed to learn"
+
+
+if __name__ == "__main__":
+    main()

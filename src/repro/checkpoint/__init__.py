@@ -1,0 +1,5 @@
+"""Atomic sharded checkpointing with async save + elastic restore."""
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer, garbage_collect, latest_step, restore, save,
+)
+__all__ = ["AsyncCheckpointer", "garbage_collect", "latest_step", "restore", "save"]

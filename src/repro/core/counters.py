@@ -1,0 +1,76 @@
+"""Performance counters + event snapshots.
+
+The paper adds "a measurement infrastructure composed of performance counters
+and FIFOs to create snapshots of the internal state of the architecture and
+relevant event timestamps" (§3).  This is the software restatement: named
+monotonic counters, a bounded snapshot FIFO of (timestamp, event, payload)
+records, and context-manager timers.  Used by the serving engine, the train
+loop, and every benchmark.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import time
+from typing import Any, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One FIFO record: a timestamped event with an arbitrary payload."""
+
+    t: float
+    event: str
+    payload: Any = None
+
+
+class PerfCounters:
+    """Named counters + bounded snapshot FIFO + wall-clock timers."""
+
+    def __init__(self, fifo_depth: int = 4096):
+        self.counters: collections.Counter[str] = collections.Counter()
+        self.fifo: collections.deque[Snapshot] = collections.deque(maxlen=fifo_depth)
+        self._timers: collections.defaultdict[str, float] = collections.defaultdict(float)
+        self._t0 = time.perf_counter()
+
+    # ---- counters ----------------------------------------------------------
+
+    def inc(self, name: str, n: int = 1) -> None:
+        self.counters[name] += n
+
+    def get(self, name: str) -> int:
+        return self.counters[name]
+
+    # ---- snapshots -----------------------------------------------------------
+
+    def snapshot(self, event: str, payload: Any = None) -> None:
+        self.fifo.append(Snapshot(time.perf_counter() - self._t0, event, payload))
+
+    def events(self, event: str | None = None) -> list[Snapshot]:
+        if event is None:
+            return list(self.fifo)
+        return [s for s in self.fifo if s.event == event]
+
+    # ---- timers ------------------------------------------------------------
+
+    @contextlib.contextmanager
+    def timer(self, name: str) -> Iterator[None]:
+        t = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._timers[name] += time.perf_counter() - t
+
+    def seconds(self, name: str) -> float:
+        return self._timers[name]
+
+    # ---- reporting -----------------------------------------------------------
+
+    def report(self) -> dict[str, Any]:
+        return {
+            "counters": dict(self.counters),
+            "timers_s": dict(self._timers),
+            "events": len(self.fifo),
+        }

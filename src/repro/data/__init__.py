@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline with multi-host sharding."""
+from repro.data.pipeline import DataConfig, SyntheticLMStream, make_global_batch
+__all__ = ["DataConfig", "SyntheticLMStream", "make_global_batch"]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True).
+
+Layout per DESIGN.md: <name>.py holds the pl.pallas_call + BlockSpec tiling,
+ops.py the jit'd public wrappers, ref.py the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,235 @@
+"""Public jit'd wrappers for the kernel package.
+
+These handle shape padding to block multiples, block-size selection, and
+(for the gather path) the beyond-paper burst-coalescing optimization, so the
+rest of the framework never deals with tiling details.  Every wrapper
+dispatches to the Pallas kernel (``use_kernel=True``, default) or the pure
+jnp oracle (``use_kernel=False`` — the XLA-native path used by dry-runs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.common import round_up
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.matmul import matmul as _matmul_kernel
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_attn_kernel,
+)
+from repro.kernels.paged_copy import paged_copy as _paged_copy_kernel
+from repro.kernels.paged_gather import paged_gather as _paged_gather_kernel
+from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "use_kernel")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype: jnp.dtype | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """``x @ y`` for arbitrary shapes (pads to MXU-aligned blocks)."""
+    if not use_kernel:
+        return ref.matmul_ref(x, y, out_dtype)
+    m, k = x.shape
+    _, n = y.shape
+    bm_, bn_, bk_ = min(bm, round_up(m, 8)), min(bn, round_up(n, 128)), min(
+        bk, round_up(k, 128)
+    )
+    mp, np_, kp = round_up(m, bm_), round_up(n, bn_), round_up(k, bk_)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_kernel(xp, yp, bm=bm_, bn=bn_, bk=bk_, out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "scale", "use_kernel")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    scale: float | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Blockwise attention; pads sequence lengths to block multiples.
+
+    Padding is appended at the *end* of both Q and KV.  For causal
+    attention padded KV tokens sit above every real query's diagonal, so
+    they are masked structurally; padded Q rows are sliced off.
+    """
+    if not use_kernel:
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    bq_, bk_ = min(bq, round_up(sq, 8)), min(bk, round_up(sk, 128))
+    sqp, skp = round_up(sq, bq_), round_up(sk, bk_)
+    if not causal and (sqp != sq or skp != sk):
+        raise ValueError("non-causal flash requires block-aligned shapes")
+    scale = scale if scale is not None else d ** -0.5
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    # keep the causal diagonal anchored at the *end*: pad Q and KV equally
+    out = _flash_kernel(
+        qp, kp_, vp, causal=causal, bq=bq_, bk=bk_, scale=scale
+    )
+    return out[:, :, :sq]
+
+
+paged_decode_attention = jax.jit(
+    lambda q, k_pool, v_pool, page_table, seq_lens, *, page_size,
+    scale=None, window=None, use_kernel=True, kv_scale=None: (
+        _paged_attn_kernel(
+            q, k_pool, v_pool, page_table, seq_lens,
+            page_size=page_size, scale=scale, window=window
+        )
+        if use_kernel and kv_scale is None
+        else ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, page_table, seq_lens,
+            page_size=page_size, scale=scale, window=window,
+            kv_scale=kv_scale,
+        )
+    ),
+    static_argnames=("page_size", "scale", "window", "use_kernel",
+                     "kv_scale"),
+)
+
+
+# ---------------------------------------------------------------------------
+# paged memory movement
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "use_kernel"))
+def paged_copy(
+    src: jax.Array,
+    pool: jax.Array,
+    page_table: jax.Array,
+    lens: jax.Array,
+    *,
+    page_size: int,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if use_kernel:
+        return _paged_copy_kernel(
+            src, pool, page_table, lens, page_size=page_size
+        )
+    return ref.paged_copy_ref(src, pool, page_table, lens, page_size=page_size)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "use_kernel"))
+def paged_gather(
+    pool: jax.Array,
+    page_table_row: jax.Array,
+    positions: jax.Array,
+    *,
+    page_size: int,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Indexed gather, one translation per element (the paper's C2 cost)."""
+    if use_kernel:
+        return _paged_gather_kernel(
+            pool, page_table_row, positions, page_size=page_size
+        )
+    return ref.paged_gather_ref(
+        pool, page_table_row, positions, page_size=page_size
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def paged_gather_coalesced(
+    pool: jax.Array,
+    page_table_row: jax.Array,
+    positions: jax.Array,
+    *,
+    page_size: int,
+) -> jax.Array:
+    """Beyond-paper: sort-coalesced indexed gather (per-PAGE translation).
+
+    AraOS translates indexed accesses per element; sorting the indices first
+    turns runs within a page into single bursts — the translation count
+    drops from N to the number of *distinct pages touched* at the cost of a
+    sort and an unpermute.  `benchmarks/bench_translation.py` quantifies the
+    crossover.  Functionally identical to :func:`paged_gather`.
+    """
+    order = jnp.argsort(positions)
+    sorted_pos = positions[order]
+    gathered = ref.paged_gather_ref(
+        pool, page_table_row, sorted_pos, page_size=page_size
+    )
+    inverse = jnp.argsort(order)
+    return gathered[inverse]
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bt", "use_kernel", "matmul_chunks")
+)
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    initial_state: jax.Array | None = None,
+    *,
+    bt: int = 128,
+    use_kernel: bool = True,
+    matmul_chunks: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    bh, t, n = r.shape
+    if matmul_chunks and use_kernel and t % 32 == 0:
+        # chunk-parallel Pallas kernel: the [C,C,N] intra-chunk tensor and
+        # the state never leave VMEM (kernels/wkv6_chunked.py)
+        from repro.kernels.wkv6_chunked import wkv6_chunked as _wkv6_ck
+        return _wkv6_ck(r, k, v, w, u, initial_state, chunk=32)
+    if not use_kernel:
+        if matmul_chunks:
+            # flash-linear-attention formulation: MXU matmuls, state
+            # traffic / chunk (EXPERIMENTS.md §Perf cell C)
+            return ref.wkv6_chunked_matmul_ref(
+                r, k, v, w, u, initial_state, chunk=min(bt, 32)
+            )
+        return ref.wkv6_chunked_ref(r, k, v, w, u, initial_state, chunk=bt)
+    bt_ = min(bt, t)
+    tp = round_up(t, bt_)
+    if tp != t:
+        # pad with identity steps: w=1 (no decay), k=0 (no update), r=0
+        pad = ((0, 0), (0, tp - t), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)
+    o, s_fin = _wkv6_kernel(r, k, v, w, u, initial_state, bt=bt_)
+    return o[:, :t], s_fin

@@ -1,0 +1,93 @@
+"""Unit-stride paged copy — one translation per page-bounded burst (C2-burst).
+
+Prefill writes freshly computed K/V tokens (logical order) into physical
+pages of the shared pool.  Like Ara2's VLSU, the copy is issued as unit-stride
+bursts clipped at page boundaries: grid step ``(b, s)`` moves logical page
+``s`` of sequence ``b`` into the physical frame the scalar-prefetched page
+table names — exactly one translation per burst, performed in the output
+index map *before* the store is issued.
+
+A partially-filled tail page is handled read-modify-write: the existing frame
+content is an input block at the same translated index, and tokens at or
+beyond the sequence's new length keep the old bytes (precise commit).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv, should_interpret
+
+
+def _paged_copy_kernel(
+    lens_ref,         # SMEM [B]   number of valid new tokens per sequence
+    page_table_ref,   # SMEM [B, max_pages]
+    src_ref,          # VMEM [1, page, W]
+    old_ref,          # VMEM [1, page, W]   existing frame content
+    o_ref,            # VMEM [1, page, W]   the translated frame
+    *,
+    page_size: int,
+):
+    del page_table_ref
+    b, s = pl.program_id(0), pl.program_id(1)
+    n_valid = lens_ref[b] - s * page_size  # valid tokens in this burst
+    tok = jax.lax.broadcasted_iota(jnp.int32, src_ref.shape, 1)
+    o_ref[...] = jnp.where(tok < n_valid, src_ref[...], old_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def paged_copy(
+    src: jax.Array,          # [B, S, W] new tokens, logical order
+    pool: jax.Array,         # [P, page, W] physical pool (updated)
+    page_table: jax.Array,   # [B, max_pages] int32
+    lens: jax.Array,         # [B] int32 — tokens of src actually valid
+    *,
+    page_size: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Write ``src[b, :lens[b]]`` through the page table. Returns new pool."""
+    if interpret is None:
+        interpret = should_interpret()
+    b, s, w = src.shape
+    n_frames, page, _ = pool.shape
+    assert page == page_size
+    n_bursts = cdiv(s, page_size)
+    if s % page_size:
+        src = jnp.pad(src, ((0, 0), (0, n_bursts * page_size - s), (0, 0)))
+
+    # Bursts past a sequence's end have no mapped frame.  They must not be
+    # routed to a real frame: their old_ref is the *pre-copy* pool, so a
+    # read-modify-write against frame 0 would clobber fresh data written to
+    # frame 0 by an earlier burst.  Route them to a trash frame instead
+    # (production pools reserve this spare frame up front).
+    trash = n_frames
+    pool = jnp.pad(pool, ((0, 1), (0, 0), (0, 0)))
+
+    def frame_index(bi, si, lens_ref, page_table_ref):
+        del lens_ref
+        entry = page_table_ref[bi, si]
+        return (jnp.where(entry < 0, trash, entry), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_bursts),
+        in_specs=[
+            pl.BlockSpec((1, page_size, w), lambda bi, si, *_: (bi, si, 0)),
+            pl.BlockSpec((1, page_size, w), frame_index),
+        ],
+        out_specs=pl.BlockSpec((1, page_size, w), frame_index),
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_copy_kernel, page_size=page_size),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        grid_spec=grid_spec,
+        input_output_aliases={3: 0},  # pool is updated in place
+        interpret=interpret,
+    )(lens.astype(jnp.int32), page_table.astype(jnp.int32),
+      src.astype(pool.dtype), pool)
+    return out[:-1]  # drop the trash frame

@@ -1,0 +1,67 @@
+"""Per-element translated gather — the indexed-access path (C2-indexed).
+
+AraOS pays "the latency of a dedicated address translation on each vector
+element" for indexed memory operations, to keep exceptions precise — the
+reason spmv and canneal underperform (§3.2).  This kernel reproduces that
+contract on TPU: an arbitrary-order gather through the page table where every
+element is its own grid step, its own SMEM translation, and its own one-row
+burst.  The translation-count asymmetry vs :mod:`paged_copy` (per-burst) is
+measured by ``benchmarks/bench_translation.py``.
+
+``ops.paged_gather`` also exposes ``coalesced=True`` — a beyond-paper
+optimization (EXPERIMENTS.md §Perf) that sorts indices, gathers whole pages
+once, and scatters back: per-*page* translation for indexed ops at the cost
+of a sort, the software analogue of an IOMMU burst coalescer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import should_interpret
+
+
+def _paged_gather_kernel(pos_ref, page_table_ref, row_ref, o_ref):
+    del pos_ref, page_table_ref  # consumed by the index maps
+    o_ref[...] = row_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def paged_gather(
+    pool: jax.Array,         # [P, page, W]
+    page_table_row: jax.Array,  # [max_pages] int32 — one sequence
+    positions: jax.Array,    # [N] int32 logical token positions, any order
+    *,
+    page_size: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gather ``pool`` rows at logical ``positions``. Returns [N, W]."""
+    if interpret is None:
+        interpret = should_interpret()
+    n = positions.shape[0]
+    _, page, w = pool.shape
+    assert page == page_size
+
+    def row_index(i, pos_ref, page_table_ref):
+        # Per-element translation: every grid step walks the page table.
+        p = pos_ref[i]
+        frame = jnp.maximum(page_table_ref[p // page_size], 0)
+        return (frame, p % page_size, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, 1, w), row_index)],
+        out_specs=pl.BlockSpec((1, w), lambda i, *_: (i, 0)),
+    )
+    return pl.pallas_call(
+        _paged_gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, w), pool.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(positions.astype(jnp.int32), page_table_row.astype(jnp.int32), pool)

@@ -1,0 +1,495 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function is the semantic ground truth its Pallas kernel is tested
+against (tests/test_kernels.py sweeps shapes and dtypes with
+``assert_allclose``).  They are also the *lowering path used by dry-runs*:
+XLA:TPU fuses these natively, so roofline numbers derived from them reflect
+what a non-Pallas implementation would cost — the Pallas kernels are the
+hand-tiled fast path for real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def matmul_ref(x: jax.Array, y: jax.Array,
+               out_dtype: jnp.dtype | None = None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,      # [B, Hq, Sq, D]
+    k: jax.Array,      # [B, Hkv, Sk, D]
+    v: jax.Array,      # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, sq, d)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        q_pos = jnp.arange(sq)[:, None]
+        k_pos = jnp.arange(sk)[None, :]
+        s = jnp.where(q_pos + (sk - sq) >= k_pos, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def chunked_attention_ref(
+    q: jax.Array,      # [B, Hq, Sq, D]
+    k: jax.Array,      # [B, Hkv, Sk, D]
+    v: jax.Array,      # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    bk: int = 512,
+) -> jax.Array:
+    """Online-softmax attention chunked over KV — pure jnp, differentiable.
+
+    The XLA-native flash restatement: a ``lax.scan`` over KV blocks with a
+    running (max, normalizer, accumulator) carry.  Peak live memory is one
+    ``[B, Hq, Sq, bk]`` score block instead of the full [Sq, Sk] matrix —
+    this is what makes 32k-token prefill and 4k training *fit* without the
+    Pallas kernel (dry-run memory_analysis is the proof).  ``window``
+    restricts keys to ``(q_pos - window, q_pos]`` (RG local attention).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    nb = -(-sk // bk)
+    pad = nb * bk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qg = q.reshape(b, hkv, g, sq, d)
+    q_pos = jnp.arange(sq) + (sk - sq)  # diagonal anchored at the end
+    kb = k.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, blk_i = xs                     # [B, Hkv, bk, D]
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+            kblk.astype(jnp.float32),
+        ) * scale                                   # [B,Hkv,G,Sq,bk]
+        k_pos = blk_i * bk + jnp.arange(bk)
+        valid = k_pos[None, :] < sk
+        if causal:
+            valid &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            valid &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(valid[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (kb, vb, jnp.arange(nb))
+    )
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,            # [B, Hkv, G, D]
+    k_pool: jax.Array,       # [P, page, Hkv, D]
+    v_pool: jax.Array,       # [P, page, Hkv, D]
+    page_table: jax.Array,   # [B, max_pages] int32
+    seq_lens: jax.Array,     # [B] int32
+    *,
+    page_size: int,
+    scale: float | None = None,
+    window: int | None = None,
+    kv_scale: float | None = None,
+) -> jax.Array:
+    """Gathers logical KV through the page table, then dense attention.
+
+    ``kv_scale``: dequantization factor for int8 KV pools (§Perf cell A —
+    halves pool bytes vs bf16)."""
+    b, hkv, g, d = q.shape
+    max_pages = page_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    # the table may have more slots than the query batch (like the kernel,
+    # only the first b rows are consulted)
+    page_table = page_table[:b]
+    seq_lens = seq_lens[:b]
+    frames = jnp.maximum(page_table, 0)                      # [B, maxp]
+    k_log = k_pool[frames]                                   # [B, maxp, page, Hkv, D]
+    v_log = v_pool[frames]
+    max_t = max_pages * page_size
+    k_log = k_log.reshape(b, max_t, hkv, d)
+    v_log = v_log.reshape(b, max_t, hkv, d)
+    if kv_scale is not None:  # int8 dequantization
+        k_log = k_log.astype(jnp.float32) * kv_scale
+        v_log = v_log.astype(jnp.float32) * kv_scale
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32),
+                   k_log.astype(jnp.float32)) * scale
+    pos = jnp.arange(max_t)[None, :]
+    valid = pos < seq_lens[:, None]                          # [B, maxT]
+    if window is not None:
+        valid &= pos >= jnp.maximum(seq_lens[:, None] - window, 0)
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+    # fully-masked rows (empty sequences) -> zeros, matching the kernel
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v_log.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def paged_copy_ref(
+    src: jax.Array,          # [B, S, W]
+    pool: jax.Array,         # [P, page, W]
+    page_table: jax.Array,   # [B, max_pages] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    page_size: int,
+) -> jax.Array:
+    b, s, w = src.shape
+    p, page, _ = pool.shape
+    tok = jnp.arange(s)[None, :]                              # [1, S]
+    valid = tok < lens[:, None]                               # [B, S]
+    frames = jnp.maximum(jnp.take_along_axis(
+        page_table, jnp.minimum(tok // page_size, page_table.shape[1] - 1),
+        axis=1), 0)
+    rows = frames * page_size + tok % page_size               # [B, S]
+    trash = p * page                                          # one spare row
+    rows = jnp.where(valid, rows, trash)
+    flat = jnp.concatenate(
+        [pool.reshape(-1, w), jnp.zeros((1, w), pool.dtype)], axis=0
+    )
+    flat = flat.at[rows.reshape(-1)].set(
+        src.reshape(-1, w).astype(pool.dtype)
+    )
+    return flat[:-1].reshape(p, page, w)
+
+
+def paged_gather_ref(
+    pool: jax.Array,            # [P, page, W]
+    page_table_row: jax.Array,  # [max_pages] int32
+    positions: jax.Array,       # [N] int32
+    *,
+    page_size: int,
+) -> jax.Array:
+    _, page, w = pool.shape
+    frames = jnp.maximum(page_table_row[positions // page_size], 0)
+    rows = frames * page_size + positions % page_size
+    return pool.reshape(-1, w)[rows]
+
+
+def wkv6_ref(
+    r: jax.Array,   # [BH, T, N]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,   # [BH, N]
+    initial_state: jax.Array | None = None,  # [BH, N, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (o [BH, T, N], final_state [BH, N, N])."""
+    bh, t, n = r.shape
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((bh, n, n), jnp.float32))
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                   # each [BH, N]
+        kv = kt[:, :, None] * vt[:, None, :]    # [BH, N, N]
+        o = jnp.einsum(
+            "bi,bij->bj", rt.astype(jnp.float32),
+            u[:, :, None].astype(jnp.float32) * kv + s,
+        )
+        s = wt[:, :, None].astype(jnp.float32) * s + kv
+        return s, o
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1),
+          v.swapaxes(0, 1), w.swapaxes(0, 1))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return o.swapaxes(0, 1).astype(r.dtype), s_fin
+
+
+def wkv6_chunked_ref(
+    r: jax.Array,   # [BH, T, N]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,   # [BH, N]
+    initial_state: jax.Array | None = None,
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """wkv6_ref with chunked rematerialization.
+
+    A plain scan over T saves an [BH, N, N] state residual per STEP for the
+    backward pass — 4096-token training would retain terabytes.  Scanning
+    over chunks with ``jax.checkpoint`` saves one state per CHUNK and
+    recomputes the inner steps in the backward sweep (the linear-recurrence
+    analogue of flash attention's recompute strategy)."""
+    bh, t, n = r.shape
+    if t <= chunk:
+        return wkv6_ref(r, k, v, w, u, initial_state)
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)  # identity decay
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((bh, n, n), jnp.float32))
+    split = lambda z: z.reshape(bh, nc, chunk, n).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def outer(s, xs):
+        rc, kc, vc, wc = xs
+        o, s2 = wkv6_ref(rc, kc, vc, wc, u, s)
+        return s2, o
+
+    s_fin, o = jax.lax.scan(outer, s0, (split(r), split(k), split(v), split(w)))
+    o = o.swapaxes(0, 1).reshape(bh, nc * chunk, n)
+    return o[:, :t], s_fin
+
+
+def wkv6_chunked_matmul_ref(
+    r: jax.Array,   # [BH, T, N]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,   # decay in (0, 1)
+    u: jax.Array,   # [BH, N]
+    initial_state: jax.Array | None = None,
+    chunk: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel WKV (flash-linear-attention formulation) — §Perf C.
+
+    The sequential recurrence streams the [N, N] state through HBM every
+    token; this reformulation processes ``chunk`` tokens per step with
+    dense matmuls, so state traffic drops by the chunk length and the
+    arithmetic feeds the MXU:
+
+      intra-chunk:  o_i += ((r_i * A_i) (k_j / A_j)^T  masked j<i) v_j
+                    + diagonal u-bonus term
+      inter-chunk:  o_i += (r_i * A_i) S_prev
+      state update: S   = D_C * S_prev + sum_j (D_C / A_j prefix) k_j v_j^T
+
+    where ``A_i = prod_{j<=i-1} w_j`` within the chunk (exclusive cumulative
+    decay) and ``D_C`` the full-chunk decay.  All cross-position factors are
+    expressed as exp(cum_i - cum_j) with i >= j, so every exponent is <= 0 —
+    no overflow, and underflow only where the contribution is genuinely
+    negligible.  Exactly equal to ``wkv6_ref`` (tests sweep both).
+    """
+    bh, t, n = r.shape
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((bh, n, n), jnp.float32))
+    f32 = lambda z: z.astype(jnp.float32)
+    split = lambda z: f32(z).reshape(bh, nc, chunk, n).swapaxes(0, 1)
+    rc, kc, vc, wc = split(r), split(k), split(v), split(w)
+
+    def one_chunk(s, xs):
+        rr, kk, vv, ww = xs                        # [BH, C, N]
+        logw = jnp.log(jnp.maximum(ww, 1e-38))
+        cum = jnp.cumsum(logw, axis=1)             # inclusive: sum_{j<=i}
+        cum_excl = cum - logw                      # exclusive: sum_{j<i}
+        a_in = jnp.exp(cum_excl)                   # decay from chunk start
+        # inter-chunk: r_i * A_i @ S_prev
+        o = jnp.einsum("bcn,bnm->bcm", rr * a_in, s)
+        # intra-chunk: exp(cum_excl_i - cum_j) for j < i  (<= 0 exponents;
+        # mask in LOG space — masked entries would have positive exponents
+        # and exp-overflow before the mask could zero them)
+        delta = cum_excl[:, :, None, :] - cum[:, None, :, :]   # [BH,C,C,N]
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        delta = jnp.where(mask[None, :, :, None], delta, -jnp.inf)
+        att = jnp.einsum("bin,bjn,bijn->bij", rr, kk, jnp.exp(delta))
+        o = o + jnp.einsum("bij,bjm->bim", att, vv)
+        # diagonal bonus: u * k_i v_i at the self position
+        o = o + (
+            (rr * u[:, None, :].astype(jnp.float32) * kk).sum(-1, keepdims=True)
+            * vv
+        )
+        # state: S = D_C S + sum_j exp(cum_C - cum_j) k_j v_j^T
+        d_c = jnp.exp(cum[:, -1, :])               # [BH, N]
+        tail = jnp.exp(cum[:, -1:, :] - cum)       # [BH, C, N]
+        s_new = d_c[:, :, None] * s + jnp.einsum(
+            "bcn,bcm->bnm", kk * tail, vv
+        )
+        return s_new, o
+
+    # remat the chunk body: the [BH, C, C, N] intra-chunk tensor is a
+    # transient; without checkpoint the backward saves it per chunk
+    s_fin, o = jax.lax.scan(
+        jax.checkpoint(one_chunk), f32(s0), (rc, kc, vc, wc)
+    )
+    o = o.swapaxes(0, 1).reshape(bh, nc * chunk, n)
+    return o[:, :t].astype(r.dtype), s_fin
+
+
+# ---------------------------------------------------------------------------
+# chunked attention with a flash-style hand-written backward (§Perf cell B)
+# ---------------------------------------------------------------------------
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=None)
+def _chunked_attention_vjp(causal: bool, window: int | None,
+                           scale: float | None, bk: int):
+    """Factory: chunked attention with a custom VJP.
+
+    Autodiff of the KV-block scan saves per-block score residuals —
+    O(Sq x Sk) memory and traffic again, defeating the chunking.  The
+    flash-attention backward stores only (out, m, l) per row [O(Sq)] and
+    RECOMPUTES each block's probabilities in the backward sweep:
+
+        p   = exp(s - m) / l
+        dv += p^T do
+        ds  = p * (do v^T - rowsum(do * out))
+        dq += ds k ;  dk += ds^T q
+    """
+
+    def fwd_only(q, k, v):
+        return _chunked_fwd(q, k, v)[0]
+
+    def _chunked_fwd(q, k, v):
+        b, hq, sq, d = q.shape
+        _, hkv, sk, _ = k.shape
+        g = hq // hkv
+        sc = scale if scale is not None else d ** -0.5
+        nb = -(-sk // bk)
+        pad = nb * bk - sk
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else k
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else v
+        qg = q.reshape(b, hkv, g, sq, d)
+        q_pos = jnp.arange(sq) + (sk - sq)
+        kb = kp.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+        vb = vp.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+
+        def valid_mask(blk_i):
+            k_pos = blk_i * bk + jnp.arange(bk)
+            valid = k_pos[None, :] < sk
+            if causal:
+                valid &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                valid &= q_pos[:, None] - k_pos[None, :] < window
+            return valid
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kblk, vblk, blk_i = xs
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * sc
+            s = jnp.where(valid_mask(blk_i)[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, sq), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+        acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                      (kb, vb, jnp.arange(nb)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None]).reshape(b, hq, sq, d).astype(q.dtype)
+        return out, (m, l, valid_mask, kb, vb, qg, sc, nb, pad)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return fwd_only(q, k, v)
+
+    def attn_fwd(q, k, v):
+        out, (m, l, _, _, _, _, _, _, _) = _chunked_fwd(q, k, v)
+        return out, (q, k, v, out, m, l)
+
+    def attn_bwd(res, do):
+        q, k, v, out, m, l = res
+        b, hq, sq, d = q.shape
+        _, hkv, sk, _ = k.shape
+        g = hq // hkv
+        sc = scale if scale is not None else d ** -0.5
+        nb = -(-sk // bk)
+        pad = nb * bk - sk
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else k
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else v
+        qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+        dog = do.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+        outg = out.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+        delta = (dog * outg).sum(-1)                    # [B,Hkv,G,Sq]
+        q_pos = jnp.arange(sq) + (sk - sq)
+        kb = kp.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+        vb = vp.reshape(b, hkv, nb, bk, d).transpose(2, 0, 1, 3, 4)
+
+        def step(dq, xs):
+            kblk, vblk, blk_i = xs
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                           kblk.astype(jnp.float32)) * sc
+            k_pos = blk_i * bk + jnp.arange(bk)
+            valid = k_pos[None, :] < sk
+            if causal:
+                valid &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                valid &= q_pos[:, None] - k_pos[None, :] < window
+            s = jnp.where(valid[None, None, None], s, _NEG_INF)
+            p = jnp.exp(s - m[..., None]) / l[..., None]     # [B,H,G,Sq,bk]
+            dv_blk = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog,
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - delta[..., None]) * sc
+            dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds,
+                                 kblk.astype(jnp.float32))
+            dk_blk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+            return dq, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+        dq, (dk_b, dv_b) = jax.lax.scan(
+            step, dq0, (kb, vb, jnp.arange(nb))
+        )
+        dk = dk_b.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nb * bk, d)
+        dv = dv_b.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nb * bk, d)
+        return (dq.reshape(b, hq, sq, d).astype(q.dtype),
+                dk[:, :, :sk].astype(k.dtype),
+                dv[:, :, :sk].astype(v.dtype))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def chunked_attention_flashbwd_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int | None = None,
+    scale: float | None = None, bk: int = 512,
+) -> jax.Array:
+    """``chunked_attention_ref`` with the flash custom VJP (same semantics,
+    O(Sq) backward residuals)."""
+    return _chunked_attention_vjp(causal, window, scale, bk)(q, k, v)

@@ -1,0 +1,4 @@
+"""Launch layer: production meshes, sharding rules, dry-run, drivers."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

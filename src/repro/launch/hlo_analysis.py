@@ -1,0 +1,165 @@
+"""HLO analysis: collective-traffic parsing + roofline terms.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not collective
+traffic, so we parse the *post-SPMD* optimized HLO (``compiled.as_text()``)
+and sum the output-tensor bytes of every collective op.  Convention: bytes
+counted are the bytes **received per device** (all-gather: gathered size;
+all-reduce: full tensor; reduce-scatter / all-to-all / collective-permute:
+output size).  Ring algorithms move ~2x for all-reduce; the roofline reports
+note this convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+from repro.core.costmodel import (
+    TPU_HBM_BW,
+    TPU_ICI_BW_PER_LINK,
+    TPU_PEAK_FLOPS_BF16,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# an HLO instruction line: `%name = <shapes> <opcode>(...)`
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[^\s]+))\s+("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+
+
+def shape_bytes(text: str) -> int:
+    """Sum the bytes of every dtype[dims] shape literal in `text`."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from post-partitioning HLO text."""
+    counts: dict[str, int] = {}
+    by_kind: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # avoid double counting async start/done pairs
+        b = shape_bytes(shapes)
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0) + b
+    return CollectiveStats(counts=counts, bytes_by_kind=by_kind)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-device roofline terms, seconds (v5e constants)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # per device
+    model_flops: float          # global 6·N·D (or 2·N·D serve)
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU at the roofline: model-flops time / bound time."""
+        ideal = self.model_flops / (self.chips * TPU_PEAK_FLOPS_BF16)
+        return ideal / self.bound_s if self.bound_s else float("nan")
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops_per_device": self.hlo_flops,
+            "hlo_bytes_per_device": self.hlo_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def roofline(
+    cost: dict,
+    coll: CollectiveStats,
+    *,
+    chips: int,
+    model_flops: float,
+) -> RooflineTerms:
+    """cost: ``compiled.cost_analysis()`` of the per-device partitioned
+    module (flops/bytes are already per device)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / TPU_PEAK_FLOPS_BF16,
+        memory_s=byts / TPU_HBM_BW,
+        collective_s=coll.total_bytes / TPU_ICI_BW_PER_LINK,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        collective_bytes=float(coll.total_bytes),
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+def fmt_seconds(s: float) -> str:
+    if s == 0 or math.isnan(s):
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if s >= scale:
+            return f"{s / scale:.3g}{unit}"
+    return f"{s:.2e}s"

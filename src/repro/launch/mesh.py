@@ -1,0 +1,72 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+device query.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the locally available devices (tests, examples)."""
+    return _mk((data, model), ("data", "model"))
+
+
+def make_serve_mesh(
+    num_kv_heads: int, head_dim: int, *, multi_pod: bool = False,
+    model_size: int = 16,
+) -> jax.sharding.Mesh:
+    """Serving mesh: the production topology with the model axis viewed as
+    a 2-D ('kv', 'hd') tile.
+
+    Same devices, same order, same physical 16x16(x2) topology as
+    ``make_production_mesh`` — only the *logical* factorization of the
+    model axis changes, so KV pools can shard jointly over KV heads and
+    head_dim without GSPMD's "involuntary full rematerialization" (it
+    cannot reshard a 1-D hd-sharding into the (kv x hd) tiling attention
+    needs; see EXPERIMENTS.md §Perf iteration 1).
+    """
+    kv = 1
+    for cand in (16, 8, 4, 2, 1):
+        if cand <= model_size and num_kv_heads % cand == 0:
+            kv = cand
+            break
+    hd = model_size // kv
+    if head_dim % hd != 0:  # degrade: replicate the remainder onto kv
+        kv, hd = 1, model_size
+        if head_dim % hd != 0:
+            raise ValueError(
+                f"cannot factor model axis for Hkv={num_kv_heads}, "
+                f"head_dim={head_dim}"
+            )
+    shape = (2, 16, kv, hd) if multi_pod else (16, kv, hd)
+    axes = (("pod",) if multi_pod else ()) + ("data", "kv", "hd")
+    return _mk(shape, axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh: ('pod', 'data') or ('data',)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def fsdp_axis(mesh: jax.sharding.Mesh) -> str | None:
+    """Axis used for parameter sharding (FSDP): intra-pod 'data' only —
+    cross-pod parameter all-gathers would traverse DCI every layer."""
+    return "data" if "data" in mesh.axis_names else None

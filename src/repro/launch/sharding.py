@@ -1,0 +1,219 @@
+"""Sharding rules: parameters (TP + FSDP), optimizer state (ZeRO), batches,
+activations.
+
+Strategy (DESIGN.md §3):
+  * TP over `model`: per-role dimension — attention head projections, FFN
+    hidden, expert index, vocabulary;
+  * FSDP over `data` (intra-pod only): the *other* large dimension of every
+    weight is sharded over the data axis; XLA inserts per-layer all-gathers
+    (prefetchable) and the optimizer state inherits the full sharding
+    (ZeRO-3-equivalent memory);
+  * pure DP over `pod`: gradients cross pods only once per step;
+  * activations: batch over (pod, data); sequence over `model` between
+    blocks (Megatron-style sequence parallelism) — the shard hook.
+
+Every rule degrades gracefully: a dimension that does not divide its mesh
+axis is left unsharded (e.g. granite-moe's 49155 vocab).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, fsdp_axis
+
+# role -> which dim gets the `model` axis (after the stacked-layer dim is
+# stripped).  Everything else: biases, norms, scalars -> replicated.
+_MODEL_DIM_BY_NAME: dict[str, int] = {
+    # [in, out]-style projections: shard the output (hidden/head) dim
+    "wq": 1, "wk": 1, "wv": 1, "w_gate": 1, "w_up": 1, "wg": 1,
+    "wr": 1, "wi": 1, "w_x": 1, "w_i": 1,
+    # output projections: shard the input dim (row-parallel)
+    "wo": 0, "w_down": 0, "w_out": 0,
+    # embeddings / heads: vocab-parallel
+    "embed": 0, "head": 1,
+    # moe experts [E, D, F]: expert-parallel
+    "w_gate_moe": 0, "w_up_moe": 0, "w_down_moe": 0,
+}
+
+
+def _spec_for(path: tuple[str, ...], shape: tuple[int, ...],
+              mesh: jax.sharding.Mesh, use_fsdp: bool = True,
+              model_axes: tuple[str, ...] = ("model",)) -> P:
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    leaf = names[-1]
+    msize = 1
+    for a in model_axes:
+        msize *= mesh.shape[a]
+    model_assign = model_axes if len(model_axes) > 1 else model_axes[0]
+    fsdp = fsdp_axis(mesh) if use_fsdp else None
+    fsize = mesh.shape[fsdp] if fsdp else 1
+
+    # stacked-layer leading dim (scan stacks): never sharded
+    stacked = int(names[0] in ("blocks", "supers", "tail"))
+    dims: list[Any] = [None] * len(shape)
+    if len(shape) - stacked < 1 or leaf in ("scale", "lam", "w0", "u",
+                                            "conv_w", "mu", "ln_x"):
+        return P(*dims)
+    is_moe = any(n == "mlp" for n in names) and len(shape) - stacked == 3
+    key = leaf + "_moe" if (is_moe and leaf in ("w_gate", "w_up", "w_down")) \
+        else leaf
+    model_dim = _MODEL_DIM_BY_NAME.get(key)
+    if key.startswith("mu_") or key.startswith("b"):
+        return P(*dims)
+    if model_dim is None:
+        # unknown 2D+ leaf: try FSDP on the largest dim only
+        model_dim = -1
+    if model_dim >= 0:
+        d = model_dim + stacked
+        if is_moe and not use_fsdp and d < len(shape):
+            # serving MoE: expert weights are the bulk of the model — shard
+            # the expert dim over data x model axes too (expert parallelism;
+            # the dispatch all-to-all crosses data groups).  Largest
+            # divisible combination wins.
+            for combo in (("data",) + model_axes,
+                          ("data", model_axes[0]),
+                          model_axes,
+                          (model_axes[0],)):
+                prod = 1
+                for a in combo:
+                    prod *= mesh.shape.get(a, 1)
+                if shape[d] % prod == 0:
+                    dims[d] = combo if len(combo) > 1 else combo[0]
+                    break
+            # remaining per-expert dims: spread leftover model axes on F
+            if (isinstance(dims[d], tuple) and "data" in dims[d]
+                    and len(dims[d]) < 1 + len(model_axes)):
+                rest = tuple(a for a in model_axes if a not in dims[d])
+                for dd in range(len(shape) - 1, stacked, -1):
+                    if dims[dd] is None and rest:
+                        prod = 1
+                        for a in rest:
+                            prod *= mesh.shape[a]
+                        if shape[dd] % prod == 0:
+                            dims[dd] = rest if len(rest) > 1 else rest[0]
+                            break
+        elif d < len(shape) and shape[d] % msize == 0:
+            dims[d] = model_assign
+    # FSDP: largest remaining divisible dim.  EXCEPT for embed/head with an
+    # indivisible vocab: their only shardable dim is the matmul CONTRACTION
+    # dim (d_model), and contraction-sharding turns every logits product
+    # into a full [B,S,V] psum — measured 227 GB/step of all-reduce on
+    # granite-moe (EXPERIMENTS.md §Perf D-1).  Replicate them instead
+    # (the table is small precisely when the vocab is odd-sized).
+    if leaf in ("embed", "head") and all(d is None for d in dims):
+        return P(*dims)
+    if fsdp:
+        cands = [
+            i for i in range(stacked, len(shape))
+            if dims[i] is None and shape[i] % fsize == 0 and shape[i] >= fsize
+        ]
+        if cands:
+            best = max(cands, key=lambda i: shape[i])
+            dims[best] = fsdp
+    return P(*dims)
+
+
+def param_shardings(params_shape: Any, mesh: jax.sharding.Mesh,
+                    use_fsdp: bool = True,
+                    model_axes: tuple[str, ...] = ("model",)) -> Any:
+    """Pytree of NamedShardings congruent with a params(-shaped) tree.
+
+    ``use_fsdp=False`` (serving): TP over the model axes only, replicated
+    over `data` — per-token parameter all-gathers would dominate decode.
+    ``model_axes``: the serving mesh views the model axis as ('kv', 'hd')."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = [
+        NamedSharding(
+            mesh, _spec_for(path, tuple(leaf.shape), mesh, use_fsdp,
+                            model_axes)
+        )
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(params_shape: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Optimizer state: moments inherit the parameter sharding (the params
+    are already fully sharded under TP+FSDP => ZeRO-3-equivalent).
+
+    Built structurally from the params tree: AdamWState(step, m, v) with
+    m and v congruent to params (NamedTuple paths are positional, so the
+    name-based rule cannot be reused on the wrapper)."""
+    from repro.optim import AdamWState
+
+    p_sh = param_shardings(params_shape, mesh)
+    return AdamWState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+
+
+def batch_shardings(batch_shape: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Batch dim over (pod, data); positions [3, B, S] handled."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        nd = len(leaf.shape)
+        if names and names[-1] == "positions" and nd == 3:
+            return NamedSharding(mesh, P(None, dp, *([None] * (nd - 2))))
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+def serve_shardings(tree_shape: Any, mesh: jax.sharding.Mesh) -> Any:
+    """Serving trees carry a leading data-group axis G on every leaf
+    (tokens [G, b], pools [G, L, P, page, Hkv, hd], ...): G -> 'data',
+    and any dim divisible by the model axis among the trailing dims of
+    pool-like leaves -> 'model' (KV head_dim).  G == 1 -> replicated."""
+    msize = mesh.shape["model"]
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        dims: list[Any] = [None] * len(shape)
+        if shape and shape[0] > 1:
+            dims[0] = "data"
+        if len(shape) >= 5 and shape[-1] % msize == 0:
+            dims[-1] = "model"   # head_dim of KV pools / wkv state
+        return NamedSharding(mesh, P(*dims))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+def make_shard_hook(mesh: jax.sharding.Mesh, *, sequence_parallel: bool = True):
+    """The models' activation-sharding hook (with_sharding_constraint)."""
+    dp = dp_axes(mesh)
+    msize = mesh.shape["model"]
+
+    def shard(x: jax.Array, name: str) -> jax.Array:
+        if name == "act_btd_nosp" and x.ndim == 3:
+            # gather the sequence axis (un-SP): per-row MoE dispatch must
+            # see whole rows, or its scatter/gather psums over `model`
+            # (EXPERIMENTS.md §Perf D-2)
+            spec = P(dp, None, None)
+        elif name == "act_btd" and x.ndim == 3:
+            seq = "model" if (
+                sequence_parallel and x.shape[1] % msize == 0
+            ) else None
+            spec = P(dp, seq, None)
+        elif name == "logits" and x.ndim >= 2:
+            v_ok = x.shape[-1] % msize == 0
+            spec = P(dp, *([None] * (x.ndim - 2)),
+                     "model" if v_ok else None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec)
+        )
+
+    return shard

@@ -1,0 +1,349 @@
+"""Dry-run case builders: ShapeDtypeStruct inputs + jitted step functions.
+
+One case per (architecture x input-shape x mesh).  No allocation ever
+happens here — params/optimizer shapes come from ``jax.eval_shape`` over the
+real init, batches and serving state are ShapeDtypeStructs, and the returned
+``jit``-wrapped function is only ``.lower().compile()``d.
+
+Serving topology (DESIGN.md §3): serve trees carry a leading data-group axis
+``G`` (= the mesh's data size when the global batch divides it, else 1).
+Each group owns its own page pool and page table — attention gathers stay
+group-local under SPMD (no cross-data collectives for KV), which is how a
+real multi-replica serving deployment shards.  The per-group model call is
+``jax.vmap`` over G.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import dp_axes
+from repro.launch.sharding import (
+    batch_shardings,
+    make_shard_hook,
+    opt_shardings,
+    param_shardings,
+)
+from repro.models import (
+    HybridState,
+    PagedKVState,
+    RecurrentState,
+    build_model,
+)
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import make_train_step
+
+PAGE_SIZE = 16
+N_VIS = 256  # stub vision prefix length
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+@dataclasses.dataclass
+class DryRunCase:
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # jitted, ready to .lower(*args)
+    args: tuple                     # ShapeDtypeStructs
+    model_flops_per_step: float     # 6·N·D (train) / 2·N per token (serve)
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def _group(mesh, global_batch: int) -> tuple[int, int, tuple]:
+    """(G, per-group batch, group axes) for serving trees.
+
+    Groups span (pod x data) so multi-pod serving shards the KV pools over
+    both axes; falls back to data-only, then to a single replicated group.
+    """
+    for axes in (("pod", "data"), ("data",)):
+        if not all(a in mesh.axis_names for a in axes):
+            continue
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if global_batch % n == 0 and global_batch >= n:
+            return n, global_batch // n, axes
+    return 1, global_batch, ()
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    """DESIGN.md §4: long_500k only for sub-quadratic archs."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# train case
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "audio" and cfg.num_codebooks > 1:
+        return {
+            "tokens": sds((b, s, cfg.num_codebooks), jnp.int32),
+            "labels": sds((b, s, cfg.num_codebooks), jnp.int32),
+            "mask": sds((b, s), jnp.float32),
+        }
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+        "mask": sds((b, s), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["positions"] = sds((3, b, s), jnp.int32)
+        batch["vision_embeds"] = sds((b, N_VIS, cfg.d_model), _dtype(cfg))
+    return batch
+
+
+VARIANTS: dict[str, dict] = {
+    # §Perf iteration variants (EXPERIMENTS.md): model-construction kwargs
+    "wkv_chunked": {"tm_impl": "chunked_matmul"},       # cell C
+    "remat_dots": {"remat_policy": "dots"},             # cell B
+    "kv_int8": {"kv_dtype": "int8"},                    # cell A
+}
+
+
+def build_train_case(arch: str, shape_name: str, mesh,
+                     variant: str | None = None) -> DryRunCase:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(
+        cfg, use_kernels=False, remat=True, shard=make_shard_hook(mesh),
+        **(VARIANTS.get(variant, {}) if variant else {}),
+    )
+    # 100B+-class models: bf16 moments (halves optimizer memory; DESIGN §3)
+    moments = "bfloat16" if cfg.param_count() > 100e9 else "float32"
+    opt_cfg = AdamWConfig(moment_dtype=moments)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt_shape = jax.eval_shape(
+        lambda p: adamw_init(p, opt_cfg.moment_dtype), params_shape
+    )
+    batch_shape = train_batch_specs(cfg, shape)
+
+    p_sh = param_shardings(params_shape, mesh)
+    o_sh = opt_shardings(params_shape, mesh)
+    b_sh = batch_shardings(batch_shape, mesh)
+
+    step = make_train_step(model, opt_cfg, donate=True,
+                           grad_shardings=p_sh)
+    # re-wrap with explicit shardings (make_train_step jits unsharded)
+    inner = step.__wrapped__ if hasattr(step, "__wrapped__") else step
+    fn = jax.jit(
+        inner,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return DryRunCase(
+        arch=arch, shape=shape_name, kind="train",
+        fn=fn, args=(params_shape, opt_shape, batch_shape),
+        model_flops_per_step=6.0 * cfg.active_param_count()
+        * shape.global_batch * shape.seq_len,
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve cases
+# ---------------------------------------------------------------------------
+
+
+def _paged_state_specs(cfg: ModelConfig, g: int, b: int, seq_len: int,
+                       frames_per_group: int, max_pages: int,
+                       kv_dtype=None):
+    dt = kv_dtype if kv_dtype is not None else _dtype(cfg)
+    pool = sds(
+        (g, cfg.num_layers, frames_per_group, PAGE_SIZE, cfg.num_kv_heads,
+         cfg.head_dim), dt,
+    )
+    return PagedKVState(
+        k_pools=pool,
+        v_pools=pool,
+        page_table=sds((g, b, max_pages), jnp.int32),
+        seq_lens=sds((g, b), jnp.int32),
+    )
+
+
+def _ns(mesh, *spec):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+
+
+def build_serve_case(arch: str, shape_name: str, mesh,
+                     serve_mode: str = "2d",
+                     variant: str | None = None) -> DryRunCase:
+    """Serve cell on either the flat production mesh (baseline; the model
+    axis cannot co-shard KV heads and head_dim, so GSPMD replicates pools —
+    see §Perf iteration 1) or the 2-D ('kv','hd') serving view (optimized,
+    default)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg, use_kernels=False, remat=False,
+                        **(VARIANTS.get(variant, {}) if variant else {}))
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if serve_mode == "2d":
+        model_axes = ("kv", "hd")
+    else:
+        model_axes = ("model",)
+    # serving: TP only — FSDP would all-gather all weights per decoded token
+    p_sh = param_shardings(params_shape, mesh, use_fsdp=False,
+                           model_axes=model_axes)
+    g, b, gaxes = _group(mesh, shape.global_batch)
+    dax = (gaxes if len(gaxes) > 1 else gaxes[0]) if g > 1 else None
+    kv_ax, hd_ax = (model_axes if len(model_axes) == 2
+                    else (None, model_axes[0]))
+    s = shape.seq_len
+    dt = _dtype(cfg)
+    is_decode = shape.kind == "decode"
+    max_pages = -(-(s + (1 if is_decode else 0)) // PAGE_SIZE)
+
+    tok_tail = (cfg.num_codebooks,) if (
+        cfg.family == "audio" and cfg.num_codebooks > 1
+    ) else ()
+
+    def ok(dim: int, *axes) -> Any:
+        """axes if the dim divides their product, else replicated"""
+        prod = 1
+        for a in axes:
+            if a is not None:
+                prod *= mesh.shape[a]
+        axes = tuple(a for a in axes if a is not None)
+        if not axes or dim % prod:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    if cfg.family == "rwkv6":
+        h, n = cfg.num_rwkv_heads, cfg.rwkv_head_size
+        state = RecurrentState(
+            tm_shift=sds((g, cfg.num_layers, b, cfg.d_model), dt),
+            cm_shift=sds((g, cfg.num_layers, b, cfg.d_model), dt),
+            wkv=sds((g, cfg.num_layers, b, h, n, n), jnp.float32),
+            seq_lens=sds((g, b), jnp.int32),
+        )
+        shift_sh = _ns(mesh, dax, None, None, ok(cfg.d_model, kv_ax, hd_ax))
+        st_sh = RecurrentState(
+            tm_shift=shift_sh, cm_shift=shift_sh,
+            wkv=_ns(mesh, dax, None, None, ok(h, kv_ax, hd_ax), None, None),
+            seq_lens=_ns(mesh, dax, None),
+        )
+        if is_decode:
+            fn = jax.vmap(model.decode_step, in_axes=(None, 0, 0))
+            args = (params_shape, sds((g, b), jnp.int32), state)
+            in_sh = (p_sh, _ns(mesh, dax, None), st_sh)
+        else:
+            fn = jax.vmap(model.prefill, in_axes=(None, 0, 0, 0))
+            args = (params_shape, sds((g, b, s), jnp.int32),
+                    sds((g, b), jnp.int32), state)
+            in_sh = (p_sh, _ns(mesh, dax, None, None), _ns(mesh, dax, None),
+                     st_sh)
+    elif cfg.family == "hybrid_rglru":
+        # window-bounded KV: only ceil(window/page)+2 frames live per seq
+        # during decode; prefill writes the full prompt (engine frees after)
+        win_pages = -(-cfg.local_window // PAGE_SIZE) + 2
+        frames = (b * (max_pages if shape.kind == "prefill" else win_pages)
+                  + 1)
+        r = cfg.rglru_dim or cfg.d_model
+        from repro.models.rglru import CONV_WIDTH
+        pool = sds((g, model.n_att, frames, PAGE_SIZE, cfg.num_kv_heads,
+                    cfg.head_dim), dt)
+        pool_sh = _ns(mesh, dax, None, None, None,
+                      ok(cfg.num_kv_heads, kv_ax), ok(cfg.head_dim, hd_ax))
+        state = HybridState(
+            rg_h=sds((g, model.n_rec, b, r), jnp.float32),
+            conv_buf=sds((g, model.n_rec, b, CONV_WIDTH - 1, r), dt),
+            k_pools=pool, v_pools=pool,
+            page_table=sds((g, b, max_pages), jnp.int32),
+            seq_lens=sds((g, b), jnp.int32),
+        )
+        st_sh = HybridState(
+            rg_h=_ns(mesh, dax, None, None, ok(r, kv_ax, hd_ax)),
+            conv_buf=_ns(mesh, dax, None, None, None, ok(r, kv_ax, hd_ax)),
+            k_pools=pool_sh, v_pools=pool_sh,
+            page_table=_ns(mesh, dax, None, None),
+            seq_lens=_ns(mesh, dax, None),
+        )
+        if is_decode:
+            fn = jax.vmap(model.decode_step, in_axes=(None, 0, 0))
+            args = (params_shape, sds((g, b), jnp.int32), state)
+            in_sh = (p_sh, _ns(mesh, dax, None), st_sh)
+        else:
+            fn = jax.vmap(model.prefill, in_axes=(None, 0, 0, 0))
+            args = (params_shape, sds((g, b, s), jnp.int32),
+                    sds((g, b), jnp.int32), state)
+            in_sh = (p_sh, _ns(mesh, dax, None, None), _ns(mesh, dax, None),
+                     st_sh)
+    else:
+        frames = b * max_pages + 1
+        state = _paged_state_specs(
+            cfg, g, b, s, frames, max_pages,
+            kv_dtype=jnp.int8 if getattr(model, "kv_dtype", "native")
+            == "int8" else None,
+        )
+        pool_sh = _ns(mesh, dax, None, None, None,
+                      ok(cfg.num_kv_heads, kv_ax), ok(cfg.head_dim, hd_ax))
+        st_sh = PagedKVState(
+            k_pools=pool_sh, v_pools=pool_sh,
+            page_table=_ns(mesh, dax, None, None),
+            seq_lens=_ns(mesh, dax, None),
+        )
+        tok_sh = _ns(mesh, dax, *([None] * (1 + len(tok_tail))))
+        if is_decode:
+            fn = jax.vmap(model.decode_step, in_axes=(None, 0, 0))
+            args = (params_shape, sds((g, b) + tok_tail, jnp.int32), state)
+            in_sh = (p_sh, tok_sh, st_sh)
+        elif cfg.family == "vlm":
+            fn = jax.vmap(model.prefill, in_axes=(None, 0, 0, 0, 0))
+            args = (params_shape, sds((g, b, s), jnp.int32),
+                    sds((g, b), jnp.int32), state,
+                    sds((g, b, N_VIS, cfg.d_model), dt))
+            in_sh = (p_sh, _ns(mesh, dax, None, None), _ns(mesh, dax, None),
+                     st_sh, _ns(mesh, dax, None, None, None))
+        else:
+            fn = jax.vmap(model.prefill, in_axes=(None, 0, 0, 0))
+            args = (params_shape, sds((g, b, s) + tok_tail, jnp.int32),
+                    sds((g, b), jnp.int32), state)
+            in_sh = (p_sh,
+                     _ns(mesh, dax, *([None] * (1 + len(tok_tail)))),
+                     _ns(mesh, dax, None), st_sh)
+
+    state_idx = 2 if is_decode else 3
+    fn = jax.jit(fn, in_shardings=in_sh, donate_argnums=(state_idx,))
+    tokens_per_step = (shape.global_batch if is_decode
+                       else shape.global_batch * s)
+    return DryRunCase(
+        arch=arch, shape=shape_name, kind=shape.kind,
+        fn=fn, args=args,
+        model_flops_per_step=2.0 * cfg.active_param_count() * tokens_per_step,
+    )
+
+
+def build_case(arch: str, shape_name: str, mesh,
+               serve_mode: str = "2d",
+               variant: str | None = None) -> DryRunCase:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_case(arch, shape_name, mesh, variant)
+    return build_serve_case(arch, shape_name, mesh, serve_mode, variant)

@@ -1,0 +1,34 @@
+"""Model zoo: dense / MoE / hybrid RG-LRU / RWKV-6 / VLM / audio backbones."""
+
+from typing import Any
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.rglru import HybridState, RecurrentGemmaLM
+from repro.models.rwkv6 import RecurrentState, RWKV6LM
+from repro.models.transformer import PagedKVState, TransformerLM
+
+
+def build_model(cfg: ModelConfig, **kwargs: Any):
+    """Factory: returns the family-appropriate LM with a common API
+    (init / loss / prefill / decode_step)."""
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return TransformerLM(cfg, **kwargs)
+    if cfg.family == "rwkv6":
+        return RWKV6LM(cfg, **kwargs)
+    if cfg.family == "hybrid_rglru":
+        return RecurrentGemmaLM(cfg, **kwargs)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+__all__ = [
+    "SHAPES",
+    "HybridState",
+    "ModelConfig",
+    "PagedKVState",
+    "RWKV6LM",
+    "RecurrentGemmaLM",
+    "RecurrentState",
+    "ShapeConfig",
+    "TransformerLM",
+    "build_model",
+]

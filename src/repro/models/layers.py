@@ -1,0 +1,235 @@
+"""Shared pure-JAX layers (no flax): norms, RoPE/M-RoPE, GQA attention, MLP.
+
+Conventions:
+  * params are plain dict pytrees of jnp arrays;
+  * every layer is an (init, apply) pair of pure functions;
+  * compute dtype follows the input; normalization and softmax statistics
+    accumulate in f32; RoPE tables are built in f32;
+  * weight layouts put the sharded dimension last where possible so the
+    `model` mesh axis lands on contiguous memory (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+Params = dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE + M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim // 2], f32."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,            # [..., S, H, D]
+    positions: jax.Array,    # [..., S]  (broadcastable)
+    theta: float,
+) -> jax.Array:
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,            # [B, S, H, D]
+    positions: jax.Array,    # [3, B, S]  (temporal, height, width)
+    theta: float,
+    sections: tuple[int, int, int],
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): the D/2 frequency slots are split into
+    t/h/w sections, each rotated by its own position stream.  Text tokens
+    carry identical t==h==w positions, reducing to standard RoPE."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                       # [D/2]
+    ang_thw = positions[..., None].astype(jnp.float32) * inv  # [3, B, S, D/2]
+    sel = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )                                                # [D/2] -> which stream
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_thw, 0, -1),                # [B, S, D/2, 3]
+        sel[None, None, :, None], axis=-1,
+    )[..., 0]                                        # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def qkv_project(params: Params, x: jax.Array, cfg) -> tuple[jax.Array, ...]:
+    """x [B, S, D] -> q [B, S, H, hd], k/v [B, S, Hkv, hd]."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention_train(
+    params: Params,
+    x: jax.Array,             # [B, S, D]
+    positions: jax.Array,     # [B, S] or [3, B, S] for mrope
+    cfg,
+    *,
+    use_kernel: bool = False,
+    window: int | None = None,
+) -> jax.Array:
+    """Full (or sliding-window) causal self-attention for train/prefill."""
+    q, k, v = qkv_project(params, x, cfg)
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    qt, kt, vt = (t.swapaxes(1, 2) for t in (q, k, v))  # [B, H, S, hd]
+    s_len = x.shape[1]
+    if use_kernel and window is None:
+        o = ops.flash_attention(qt, kt, vt, causal=True)
+    elif s_len > 1024 or window is not None:
+        # chunked online-softmax with flash custom-VJP: never materializes
+        # [Sq, Sk] in either pass, O(Sq) backward residuals
+        o = ref.chunked_attention_flashbwd_ref(
+            qt, kt, vt, causal=True, window=window
+        )
+    else:
+        o = ref.flash_attention_ref(qt, kt, vt, causal=True)
+    b, s = x.shape[:2]
+    return o.swapaxes(1, 2).reshape(b, s, -1) @ params["wo"]
+
+
+def _windowed_attention(q, k, v, window: int) -> jax.Array:
+    """Causal attention restricted to the last `window` keys (RG local)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d)
+    scores = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d ** -0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = (q_pos >= k_pos) & (q_pos - k_pos < window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, s, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d: int, f: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params[
+        "w_down"
+    ]
+
+
+# ---------------------------------------------------------------------------
+# LM head + loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(
+    logits: jax.Array,     # [B, S, V]
+    labels: jax.Array,     # [B, S] int32
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Mean causal-LM cross entropy, f32 statistics."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN with sort-based (ragged) dispatch.
+
+Two dispatch implementations with identical semantics:
+
+  * ``moe_apply_sorted`` (default) — production path: tokens are argsorted by
+    expert id, packed into per-expert capacity buffers by rank, processed with
+    a grouped einsum ``[E, C, D] x [E, D, F]``, and combined by gather +
+    gate-weighted sum.  No [T, E, C] one-hot tensor is ever materialized.
+    Tokens beyond an expert's capacity are dropped (their residual passes
+    through), standard Switch/GShard behaviour.
+
+  * ``moe_apply_dense`` — O(E·T) oracle that computes every expert for every
+    token and masks.  Used as the correctness reference in tests and as the
+    naive baseline of the MoE perf-hillclimb cell (EXPERIMENTS.md §Perf).
+
+Expert-parallelism: expert-indexed weights ``[E, D, F]`` shard E over the
+``model`` mesh axis; the scatter/gather around the grouped einsum becomes the
+all-to-all in the dry-run's collective schedule.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = dict[str, Any]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) / math.sqrt(f)).astype(dtype),
+    }
+
+
+def router_topk(params: Params, x: jax.Array, k: int):
+    """Returns (expert_ids [T, k] int32, gates [T, k] f32, aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ params["router"]          # [T, E]
+    e = logits.shape[-1]
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, expert_ids = jax.lax.top_k(gates_all, k)            # [T, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    density = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0
+    ) / expert_ids.size
+    router_prob = gates_all.mean(axis=0)
+    aux = e * jnp.sum(density * router_prob)
+    return expert_ids.astype(jnp.int32), gates, aux
+
+
+def capacity(t: int, k: int, e: int, factor: float = 1.25) -> int:
+    return max(1, math.ceil(t * k / e * factor))
+
+
+def moe_apply_sorted(
+    params: Params,
+    x: jax.Array,                  # [T, D] (caller flattens batch x seq)
+    *,
+    num_experts: int,
+    k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """Sort-based dispatch. Returns (out [T, D], aux_loss)."""
+    t, d = x.shape
+    e = num_experts
+    c = capacity(t, k, e, capacity_factor)
+    expert_ids, gates, aux = router_topk(params, x, k)
+
+    flat_e = expert_ids.reshape(-1)                            # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)     # [T*k]
+    order = jnp.argsort(flat_e, stable=True)                   # group by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    # rank of each assignment within its expert group
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts               # exclusive prefix sum
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = rank < c
+    buf_idx = jnp.where(keep, e_sorted * c + rank, e * c)      # drop -> trash row
+
+    # pack expert inputs [E*C+1, D] (last row = trash)
+    expert_in = jnp.zeros((e * c + 1, d), x.dtype).at[buf_idx].set(x[t_sorted])
+    h = expert_in[:-1].reshape(e, c, d)
+    up = jnp.einsum("ecd,edf->ecf", h, params["w_up"])
+    gate = jnp.einsum("ecd,edf->ecf", h, params["w_gate"])
+    h2 = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, params["w_down"])
+
+    # combine: gather back per assignment, weight by gate, sum over k
+    flat_out = jnp.concatenate(
+        [h2.reshape(e * c, d), jnp.zeros((1, d), h2.dtype)], axis=0
+    )[buf_idx]                                                  # [T*k, D] sorted
+    inv = jnp.argsort(order)
+    per_assign = flat_out[inv].reshape(t, k, d)
+    out = (per_assign.astype(jnp.float32) * gates[..., None]).sum(1)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_ragged(
+    params: Params,
+    x: jax.Array,                  # [T, D]
+    *,
+    num_experts: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Drop-free grouped-matmul dispatch via ``jax.lax.ragged_dot``.
+
+    The modern production path (megablocks-style): assignments are sorted by
+    expert, the three FFN matmuls run as ragged group GEMMs with *exact*
+    per-expert group sizes — no capacity buffers, no token dropping, O(T·k)
+    activation memory.  Exactly equal to the dense oracle.  Default dispatch
+    for both training and serving; the capacity-based ``moe_apply_sorted``
+    remains as the GShard-faithful baseline (§Perf compares them).
+    """
+    t, d = x.shape
+    e = num_experts
+    expert_ids, gates, aux = router_topk(params, x, k)
+    flat_e = expert_ids.reshape(-1)                            # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    xs = x[order // k]                                         # [T*k, D]
+    group_sizes = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    up = jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    gate = jax.lax.ragged_dot(xs, params["w_gate"], group_sizes)
+    h = (jax.nn.silu(gate.astype(jnp.float32)) *
+         up.astype(jnp.float32)).astype(x.dtype)
+    out_sorted = jax.lax.ragged_dot(h, params["w_down"], group_sizes)
+    per_assign = out_sorted[jnp.argsort(order)].reshape(t, k, d)
+    out = (per_assign.astype(jnp.float32) * gates[..., None]).sum(1)
+    return out.astype(x.dtype), aux
+
+
+def moe_apply_sorted_rows(
+    params: Params,
+    x: jax.Array,                  # [B, S, D] — rows stay data-sharded
+    *,
+    num_experts: int,
+    k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-row (GShard "group") sorted dispatch.
+
+    A single global argsort over all B*S tokens is a *global* sort under
+    SPMD — GSPMD materializes cross-shard gathers of every token.  GShard's
+    fix is hierarchical dispatch: each data-sharded group (here: a batch
+    row) sorts and packs its own tokens locally; only the expert einsum
+    crosses shards (the expert-parallel all-to-all).  Capacity is per row.
+    """
+    def one_row(xr):
+        return moe_apply_sorted(
+            params, xr, num_experts=num_experts, k=k,
+            capacity_factor=capacity_factor,
+        )
+
+    out, aux = jax.vmap(one_row)(x)
+    return out, aux.mean()
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _ragged_moe_vmappable(num_experts: int, k: int):
+    """``moe_apply_ragged`` wrapped for vmap (serving groups).
+
+    ``jax.lax.ragged_dot`` has no batching rule, but MoE routing is purely
+    per-token: a batch of G groups is exactly one dispatch over the G*T
+    flattened tokens.  The custom_vmap rule flattens, runs the unbatched
+    primal once, and unflattens — zero extra compute, and the grouped
+    serve path (vmap over the data-group axis) lowers cleanly.
+    """
+
+    @jax.custom_batching.custom_vmap
+    def fn(params, x):
+        return moe_apply_ragged(params, x, num_experts=num_experts, k=k)
+
+    @fn.def_vmap
+    def _rule(axis_size, in_batched, params, x):
+        params_batched, x_batched = in_batched
+        assert not any(jax.tree.leaves(params_batched)), (
+            "expert weights must be unbatched across serve groups"
+        )
+        g, t, d = x.shape
+        out, aux = fn(params, x.reshape(g * t, d))
+        return (out.reshape(g, t, d), jnp.full((g,), aux)), (True, True)
+
+    return fn
+
+
+def moe_apply_ragged_batched(params: Params, x: jax.Array, *,
+                             num_experts: int, k: int):
+    """vmap-safe entry point (used by the serving paths)."""
+    return _ragged_moe_vmappable(num_experts, k)(params, x)
+
+
+def moe_apply_dense(
+    params: Params,
+    x: jax.Array,                  # [T, D]
+    *,
+    num_experts: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """O(E·T) oracle: every expert computes every token; mask + combine.
+
+    No capacity, no dropping — exact top-k semantics.  The sorted path
+    matches it exactly whenever no token exceeds expert capacity.
+    """
+    expert_ids, gates, aux = router_topk(params, x, k)
+    up = jnp.einsum("td,edf->etf", x, params["w_up"])
+    gate = jnp.einsum("td,edf->etf", x, params["w_gate"])
+    h2 = jnp.einsum("etf,efd->etd", jax.nn.silu(gate) * up, params["w_down"])
+    onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=jnp.float32)  # [T,k,E]
+    weights = (onehot * gates[..., None]).sum(1)               # [T, E]
+    out = jnp.einsum("te,etd->td", weights, h2.astype(jnp.float32))
+    return out.astype(x.dtype), aux

@@ -1,0 +1,408 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern (arXiv:2402.19427): repeating (recurrent, recurrent, local
+attention) — a 1:2 local-attn:RG-LRU ratio.  38 layers = 12 scanned
+super-blocks of 3 + a 2-layer recurrent tail.
+
+Recurrent block:   x -> [gelu(W_gate x)] * [RG-LRU(conv1d_4(W_x x))] -> W_out
+RG-LRU:            r_t = sig(W_r x_t), i_t = sig(W_i x_t)
+                   a_t = exp(-c * softplus(L) * r_t)           (c = 8)
+                   h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+Training uses an associative scan over time (log-depth — the sub-quadratic
+path that qualifies this arch for ``long_500k``); decode is a single
+recurrence step.
+
+Local attention: MQA (kv=1) with a sliding window; serving uses the paged KV
+cache with *window*-bounded masking, so the engine only keeps the last
+``window`` tokens mapped — pages behind the window are freed (a paging win
+impossible with a contiguous cache; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+CONV_WIDTH = 4
+RGLRU_C = 8.0
+
+
+class HybridState(NamedTuple):
+    """Serving state: recurrent slabs + paged KV for the attention layers."""
+
+    rg_h: jax.Array        # [n_rec, B, R]      RG-LRU hidden state
+    conv_buf: jax.Array    # [n_rec, B, CONV_WIDTH-1, R] causal conv tail
+    k_pools: jax.Array     # [n_att, P, page, 1, hd]
+    v_pools: jax.Array     # [n_att, P, page, 1, hd]
+    page_table: jax.Array  # [B, max_pages]
+    seq_lens: jax.Array    # [B]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pools.shape[3]
+
+
+def _rglru_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + bx_t along axis 1, first-order linear scan.
+
+    a, bx: [B, T, R]; h0 [B, R].  Associative combine:
+    (a1, b1) . (a2, b2) = (a1*a2, a2*b1 + b2).
+    """
+    bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+class RecurrentGemmaLM:
+    def __init__(self, cfg: ModelConfig, *, use_kernels: bool = False,
+                 remat: bool = True, shard=None):
+        assert cfg.family == "hybrid_rglru"
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.remat = remat
+        self.shard = shard or (lambda x, name: x)
+        self.dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+            cfg.param_dtype
+        ]
+        pattern = cfg._full_pattern()
+        self.pattern_len = len(cfg.block_pattern)
+        self.n_super = cfg.num_layers // self.pattern_len
+        self.n_tail = cfg.num_layers - self.n_super * self.pattern_len
+        tail_pattern = cfg.block_pattern[: self.n_tail]
+        assert all(p == "rglru" for p in tail_pattern), (
+            "tail layers must be recurrent (pattern starts with rglru)"
+        )
+        self.n_rec = sum(1 for p in pattern if p == "rglru")
+        self.n_att = sum(1 for p in pattern if p == "local")
+
+    @property
+    def rdim(self) -> int:
+        return self.cfg.rglru_dim or self.cfg.d_model
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def _init_recurrent(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        d, r = cfg.d_model, self.rdim
+        ks = jax.random.split(key, 6)
+        return {
+            "ln": L.rmsnorm_init(d, dt),
+            "w_gate": L.dense_init(ks[0], d, r, dt),
+            "w_x": L.dense_init(ks[1], d, r, dt),
+            "conv_w": (jax.random.normal(ks[2], (CONV_WIDTH, r), jnp.float32)
+                       * 0.1).astype(dt),
+            "w_r": L.dense_init(ks[3], r, r, dt),
+            "w_i": L.dense_init(ks[4], r, r, dt),
+            "lam": jax.random.uniform(
+                jax.random.fold_in(key, 7), (r,), jnp.float32, 0.4, 0.8
+            ),  # Lambda, pre-softplus
+            "w_out": L.dense_init(ks[5], r, d, dt),
+            "ln2": L.rmsnorm_init(d, dt),
+            "mlp": L.swiglu_init(jax.random.fold_in(key, 8), d, cfg.d_ff, dt),
+        }
+
+    def _init_attention(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        return {
+            "ln": L.rmsnorm_init(cfg.d_model, dt),
+            "attn": L.attention_init(key, cfg, dt),
+            "ln2": L.rmsnorm_init(cfg.d_model, dt),
+            "mlp": L.swiglu_init(jax.random.fold_in(key, 1), cfg.d_model,
+                                 cfg.d_ff, dt),
+        }
+
+    def _init_superblock(self, key) -> Params:
+        ks = jax.random.split(key, self.pattern_len)
+        p: Params = {}
+        rec_i = 0
+        for i, kind in enumerate(self.cfg.block_pattern):
+            if kind == "rglru":
+                p[f"rec{rec_i}"] = self._init_recurrent(ks[i])
+                rec_i += 1
+            else:
+                p["attn"] = self._init_attention(ks[i])
+        return p
+
+    def init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        k_emb, k_sb, k_tail, k_head = jax.random.split(key, 4)
+        p: Params = {
+            "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+            "supers": jax.vmap(self._init_superblock)(
+                jax.random.split(k_sb, self.n_super)
+            ),
+            "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+            "head": L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+        }
+        if self.n_tail:
+            p["tail"] = jax.vmap(self._init_recurrent)(
+                jax.random.split(k_tail, self.n_tail)
+            )
+        return p
+
+    # ------------------------------------------------------------------
+    # recurrent block (train path: associative scan over time)
+    # ------------------------------------------------------------------
+
+    def _recurrent_block(
+        self, p: Params, x: jax.Array,
+        h0: jax.Array, conv_buf: jax.Array,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """x [B, T, D]; h0 [B, R]; conv_buf [B, CONV_WIDTH-1, R].
+
+        Returns (out, h_final, new_conv_buf).
+        """
+        cfg = self.cfg
+        xn = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+        gate = jax.nn.gelu(xn @ p["w_gate"])                 # [B, T, R]
+        u = xn @ p["w_x"]                                     # [B, T, R]
+        # causal conv1d over time (width 4), carrying the previous tail
+        u_ext = jnp.concatenate([conv_buf.astype(u.dtype), u], axis=1)
+        conv = sum(
+            u_ext[:, i : i + u.shape[1], :] * p["conv_w"][i]
+            for i in range(CONV_WIDTH)
+        )
+        new_conv_buf = u_ext[:, -(CONV_WIDTH - 1):, :]
+        # RG-LRU
+        conv32 = conv.astype(jnp.float32)
+        r = jax.nn.sigmoid(conv32 @ p["w_r"].astype(jnp.float32))
+        i = jax.nn.sigmoid(conv32 @ p["w_i"].astype(jnp.float32))
+        log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r      # [B, T, R] f32
+        a = jnp.exp(log_a)
+        bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * conv32)
+        h = _rglru_scan(a, bx, h0.astype(jnp.float32))        # [B, T, R]
+        out = (gate * h.astype(gate.dtype)) @ p["w_out"]
+        x = x + out
+        x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        return x, h[:, -1, :], new_conv_buf
+
+    def _attention_block_train(self, p, x, positions):
+        cfg = self.cfg
+        h = L.attention_train(
+            p["attn"], L.rmsnorm(p["ln"], x, cfg.norm_eps), positions, cfg,
+            window=cfg.local_window,
+        )
+        x = x + h
+        return x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+    # ------------------------------------------------------------------
+    # training forward
+    # ------------------------------------------------------------------
+
+    def forward(self, params: Params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        b, t = tokens.shape
+        r = self.rdim
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        x = params["embed"][tokens]
+        n_rec_per_super = sum(
+            1 for k in cfg.block_pattern if k == "rglru"
+        )
+        h0 = jnp.zeros((n_rec_per_super, b, r), jnp.float32)
+        conv0 = jnp.zeros((n_rec_per_super, b, CONV_WIDTH - 1, r), self.dtype)
+
+        def body(carry, sb_params):
+            x = carry
+            x = self.shard(x, "act_btd")
+            rec_i = 0
+            for kind in cfg.block_pattern:
+                if kind == "rglru":
+                    x, _, _ = self._recurrent_block(
+                        sb_params[f"rec{rec_i}"], x,
+                        h0[rec_i], conv0[rec_i],
+                    )
+                    rec_i += 1
+                else:
+                    x = self._attention_block_train(
+                        sb_params["attn"], x, positions
+                    )
+            return x, None
+
+        f = jax.checkpoint(body) if self.remat else body
+        x, _ = jax.lax.scan(f, x, params["supers"])
+        if self.n_tail:
+            def tail_body(carry, tp):
+                out, _, _ = self._recurrent_block(
+                    tp, carry, h0[0], conv0[0]
+                )
+                return out, None
+            ft = jax.checkpoint(tail_body) if self.remat else tail_body
+            x, _ = jax.lax.scan(ft, x, params["tail"])
+        return L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+    def loss(self, params: Params, batch: dict[str, jax.Array]):
+        h = self.forward(params, batch["tokens"])
+        logits = self.shard(h @ params["head"], "logits")
+        xent = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def init_state(self, batch: int, num_pages: int, page_size: int,
+                   max_pages: int) -> HybridState:
+        cfg = self.cfg
+        r = self.rdim
+        return HybridState(
+            rg_h=jnp.zeros((self.n_rec, batch, r), jnp.float32),
+            conv_buf=jnp.zeros(
+                (self.n_rec, batch, CONV_WIDTH - 1, r), self.dtype
+            ),
+            k_pools=jnp.zeros(
+                (self.n_att, num_pages, page_size, cfg.num_kv_heads,
+                 cfg.head_dim), self.dtype,
+            ),
+            v_pools=jnp.zeros(
+                (self.n_att, num_pages, page_size, cfg.num_kv_heads,
+                 cfg.head_dim), self.dtype,
+            ),
+            page_table=jnp.full((batch, max_pages), -1, jnp.int32),
+            seq_lens=jnp.zeros((batch,), jnp.int32),
+        )
+
+    def _attention_block_serve(
+        self, p, x, k_pool, v_pool, page_table, kv_lens, positions,
+        prompt_lens=None,
+    ):
+        """Serve-path attention. x [B, T, D].  For prefill (T>1) writes KV
+        bursts + windowed flash; for decode (T==1) writes one row + paged
+        windowed attention."""
+        cfg = self.cfg
+        b, t, _ = x.shape
+        hkv, hd, g = cfg.num_kv_heads, cfg.head_dim, cfg.q_per_kv
+        page = k_pool.shape[1]
+        q, k, v = L.qkv_project(p["attn"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if t > 1:  # prefill
+            k_pool = ops.paged_copy(
+                k.reshape(b, t, hkv * hd), k_pool.reshape(-1, page, hkv * hd),
+                page_table, prompt_lens, page_size=page,
+                use_kernel=self.use_kernels,
+            ).reshape(k_pool.shape)
+            v_pool = ops.paged_copy(
+                v.reshape(b, t, hkv * hd), v_pool.reshape(-1, page, hkv * hd),
+                page_table, prompt_lens, page_size=page,
+                use_kernel=self.use_kernels,
+            ).reshape(v_pool.shape)
+            qt, kt, vt = (z.swapaxes(1, 2) for z in (q, k, v))
+            from repro.kernels import ref as _ref
+            o = _ref.chunked_attention_ref(
+                qt, kt, vt, causal=True, window=cfg.local_window
+            )
+            o = o.swapaxes(1, 2).reshape(b, t, -1)
+        else:  # decode
+            pos = kv_lens - 1  # new token position (kv_lens includes it)
+            frames = jnp.take_along_axis(
+                page_table, (pos // page)[:, None], axis=1
+            )[:, 0]
+            # inactive slots -> reserved scratch row (see transformer.py)
+            n_rows = k_pool.shape[0] * page
+            rows = jnp.where(
+                frames < 0, n_rows - 1, frames * page + pos % page
+            )
+            k_pool = k_pool.reshape(-1, hkv, hd).at[rows].set(
+                k[:, 0]
+            ).reshape(k_pool.shape)
+            v_pool = v_pool.reshape(-1, hkv, hd).at[rows].set(
+                v[:, 0]
+            ).reshape(v_pool.shape)
+            qh = q[:, 0].reshape(b, hkv, g, hd)
+            o = ops.paged_decode_attention(
+                qh, k_pool, v_pool, page_table, kv_lens,
+                page_size=page, window=cfg.local_window,
+                use_kernel=self.use_kernels,
+            ).reshape(b, 1, hkv * g * hd)
+        x = x + o @ p["attn"]["wo"]
+        x = x + L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+        return x, k_pool, v_pool
+
+    def _serve_pass(self, params, x, state: HybridState, positions,
+                    prompt_lens=None, kv_lens=None):
+        """Shared prefill/decode layer sweep (host-unrolled; 38 layers)."""
+        cfg = self.cfg
+        rg_h, conv_buf = [], []
+        k_pools, v_pools = [], []
+        rec_i = att_i = 0
+        pattern = cfg._full_pattern()
+        for li, kind in enumerate(pattern):
+            if kind == "rglru":
+                si, pi = divmod(rec_i, sum(
+                    1 for k in cfg.block_pattern if k == "rglru"
+                ))
+                if li < self.n_super * self.pattern_len:
+                    p = jax.tree.map(
+                        lambda z: z[si], params["supers"][f"rec{pi}"]
+                    )
+                else:
+                    p = jax.tree.map(
+                        lambda z: z[li - self.n_super * self.pattern_len],
+                        params["tail"],
+                    )
+                x, h_fin, cb = self._recurrent_block(
+                    p, x, state.rg_h[rec_i], state.conv_buf[rec_i]
+                )
+                rg_h.append(h_fin)
+                conv_buf.append(cb)
+                rec_i += 1
+            else:
+                si = att_i
+                p = jax.tree.map(lambda z: z[si], params["supers"]["attn"])
+                x, kp, vp = self._attention_block_serve(
+                    p, x, state.k_pools[att_i], state.v_pools[att_i],
+                    state.page_table, kv_lens, positions, prompt_lens,
+                )
+                k_pools.append(kp)
+                v_pools.append(vp)
+                att_i += 1
+        new_state = HybridState(
+            rg_h=jnp.stack(rg_h),
+            conv_buf=jnp.stack(conv_buf),
+            k_pools=jnp.stack(k_pools),
+            v_pools=jnp.stack(v_pools),
+            page_table=state.page_table,
+            seq_lens=kv_lens,
+        )
+        return L.rmsnorm(params["ln_f"], x, cfg.norm_eps), new_state
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def prefill(self, params, tokens, prompt_lens, state: HybridState):
+        b, t = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        x = params["embed"][tokens]
+        h, new_state = self._serve_pass(
+            params, x, state, positions,
+            prompt_lens=prompt_lens.astype(jnp.int32),
+            kv_lens=prompt_lens.astype(jnp.int32),
+        )
+        last = jnp.take_along_axis(
+            h, jnp.maximum(prompt_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        return last @ params["head"], new_state
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def decode_step(self, params, tokens, state: HybridState):
+        b = tokens.shape[0]
+        pos = state.seq_lens                        # new token position
+        x = params["embed"][tokens][:, None, :]
+        h, new_state = self._serve_pass(
+            params, x, state, pos[:, None], kv_lens=pos + 1,
+        )
+        return h[:, 0] @ params["head"], new_state

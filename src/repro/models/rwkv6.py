@@ -1,0 +1,262 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+Faithful structure (arXiv:2404.05892): alternating time-mix and channel-mix
+blocks.  Time-mix computes r/k/v/g from token-shift interpolations and a
+*data-dependent* per-channel decay ``w_t = exp(-exp(w0 + LoRA(x_t)))`` — the
+defining Finch feature — then runs the linear-state recurrence
+(``kernels/wkv6.py``).  Channel-mix is the squared-ReLU MLP.
+
+Simplifications vs the released checkpoints (documented per DESIGN.md §2):
+RMSNorm instead of biased LayerNorm; static token-shift mixing coefficients
+(the decay keeps its LoRA); per-head RMS normalization of the wkv output in
+place of GroupNorm.  None affect the latency/overhead quantities this
+reproduction evaluates.
+
+Serving: NO KV cache — per-request state is O(1) in context length
+(`[H, N, N]` wkv state + two shift vectors per layer), which is why this
+architecture runs the ``long_500k`` shape.  State slabs are allocated and
+context-switched by the vmem subsystem, but paging/translation is
+inapplicable (DESIGN.md §4 — noted, arch fully implemented).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+Params = dict[str, Any]
+LORA_RANK = 64
+
+
+class RecurrentState(NamedTuple):
+    """Per-request recurrent state, stacked over layers."""
+
+    tm_shift: jax.Array   # [L, B, D]   last token seen by time-mix
+    cm_shift: jax.Array   # [L, B, D]   last token seen by channel-mix
+    wkv: jax.Array        # [L, B, H, N, N]  f32 recurrence state
+    seq_lens: jax.Array   # [B]
+
+
+def _head_rms(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS normalization of the wkv output. x [..., H, N]."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+class RWKV6LM:
+    def __init__(self, cfg: ModelConfig, *, use_kernels: bool = False,
+                 remat: bool = True, shard=None,
+                 tm_impl: str = "sequential"):
+        assert cfg.family == "rwkv6"
+        self.cfg = cfg
+        self.use_kernels = use_kernels
+        self.tm_impl = tm_impl  # "sequential" | "chunked_matmul"
+        self.remat = remat
+        self.shard = shard or (lambda x, name: x)
+        self.dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+            cfg.param_dtype
+        ]
+
+    # ------------------------------------------------------------------
+
+    def _init_block(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        d, f = cfg.d_model, cfg.d_ff
+        h, n = cfg.num_rwkv_heads, cfg.rwkv_head_size
+        ks = jax.random.split(key, 10)
+        u01 = lambda k, shape: jax.random.uniform(k, shape, jnp.float32)
+        return {
+            "ln1": L.rmsnorm_init(d, dt),
+            "ln2": L.rmsnorm_init(d, dt),
+            "tm": {
+                "mu_r": u01(ks[0], (d,)).astype(dt),
+                "mu_k": u01(ks[1], (d,)).astype(dt),
+                "mu_v": u01(ks[2], (d,)).astype(dt),
+                "mu_g": u01(ks[3], (d,)).astype(dt),
+                "mu_w": u01(ks[4], (d,)).astype(dt),
+                "w0": (-6.0 + u01(ks[5], (d,)) * 2.0),          # f32
+                "w_lora_A": L.dense_init(ks[6], d, LORA_RANK, jnp.float32),
+                "w_lora_B": jnp.zeros((LORA_RANK, d), jnp.float32),
+                "wr": L.dense_init(ks[7], d, d, dt),
+                "wk": L.dense_init(ks[8], d, d, dt),
+                "wv": L.dense_init(ks[9], d, d, dt),
+                "wg": L.dense_init(jax.random.fold_in(key, 10), d, d, dt),
+                "wo": L.dense_init(jax.random.fold_in(key, 11), d, d, dt),
+                "u": (u01(jax.random.fold_in(key, 12), (h, n)) - 0.5),  # f32
+                "ln_x": jnp.ones((d,), dt),
+            },
+            "cm": {
+                "mu": u01(jax.random.fold_in(key, 13), (d,)).astype(dt),
+                "wr": L.dense_init(jax.random.fold_in(key, 14), d, d, dt),
+                "wk": L.dense_init(jax.random.fold_in(key, 15), d, f, dt),
+                "wv": L.dense_init(jax.random.fold_in(key, 16), f, d, dt),
+            },
+        }
+
+    def init(self, key) -> Params:
+        cfg, dt = self.cfg, self.dtype
+        k_emb, k_blocks, k_head = jax.random.split(key, 3)
+        stacked = jax.vmap(self._init_block)(
+            jax.random.split(k_blocks, cfg.num_layers)
+        )
+        return {
+            "embed": L.embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt),
+            "blocks": stacked,
+            "ln_f": L.rmsnorm_init(cfg.d_model, dt),
+            "head": L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dt),
+        }
+
+    # ------------------------------------------------------------------
+    # block math (shared by train and serve paths)
+    # ------------------------------------------------------------------
+
+    def _decay(self, tm: Params, xw: jax.Array) -> jax.Array:
+        """Data-dependent decay in (0, 1): exp(-exp(w0 + LoRA(xw)))."""
+        lora = jnp.tanh(xw.astype(jnp.float32) @ tm["w_lora_A"]) @ tm["w_lora_B"]
+        return jnp.exp(-jnp.exp(tm["w0"] + lora))
+
+    def _time_mix(
+        self, p: Params, x: jax.Array, x_prev: jax.Array,
+        wkv_state: jax.Array,
+    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """x [B, T, D]; x_prev [B, D]; wkv_state [B, H, N, N] f32.
+
+        Returns (out [B, T, D], new_x_prev, new_wkv_state).
+        """
+        cfg = self.cfg
+        b, t, d = x.shape
+        h, n = cfg.num_rwkv_heads, cfg.rwkv_head_size
+        tm = p["tm"]
+        shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+        mix = lambda mu: x + (shifted - x) * mu
+        r = mix(tm["mu_r"]) @ tm["wr"]
+        k = mix(tm["mu_k"]) @ tm["wk"]
+        v = mix(tm["mu_v"]) @ tm["wv"]
+        g = mix(tm["mu_g"]) @ tm["wg"]
+        w = self._decay(tm, mix(tm["mu_w"]))                  # [B, T, D] f32
+
+        to_heads = lambda z: z.reshape(b, t, h, n).transpose(0, 2, 1, 3).reshape(
+            b * h, t, n
+        )
+        u = jnp.tile(tm["u"], (b, 1))                          # [B*H, N]
+        o, s_fin = ops.wkv6(
+            to_heads(r).astype(jnp.float32),
+            to_heads(k).astype(jnp.float32),
+            to_heads(v).astype(jnp.float32),
+            to_heads(w),
+            u,
+            wkv_state.reshape(b * h, n, n),
+            use_kernel=self.use_kernels,
+            matmul_chunks=(self.tm_impl == "chunked_matmul"),
+        )
+        o = o.reshape(b, h, t, n).transpose(0, 2, 1, 3)        # [B, T, H, N]
+        o = _head_rms(o, tm["ln_x"].reshape(h, n)).reshape(b, t, d)
+        out = (o.astype(x.dtype) * jax.nn.silu(g)) @ tm["wo"]
+        return out, x[:, -1, :], s_fin.reshape(b, h, n, n)
+
+    def _channel_mix(
+        self, p: Params, x: jax.Array, x_prev: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        cm = p["cm"]
+        shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+        xm = x + (shifted - x) * cm["mu"]
+        rr = jax.nn.sigmoid(xm @ cm["wr"])
+        kk = jnp.square(jax.nn.relu(xm @ cm["wk"]))
+        return rr * (kk @ cm["wv"]), x[:, -1, :]
+
+    def _block(self, block_p: Params, x: jax.Array, tm_prev, cm_prev, wkv):
+        cfg = self.cfg
+        x = self.shard(x, "act_btd")
+        xn = L.rmsnorm(block_p["ln1"], x, cfg.norm_eps)
+        tm_out, tm_prev_new, wkv_new = self._time_mix(block_p, xn, tm_prev, wkv)
+        x = x + tm_out
+        xn = L.rmsnorm(block_p["ln2"], x, cfg.norm_eps)
+        cm_out, cm_prev_new = self._channel_mix(block_p, xn, cm_prev)
+        return x + cm_out, tm_prev_new, cm_prev_new, wkv_new
+
+    # ------------------------------------------------------------------
+    # training
+    # ------------------------------------------------------------------
+
+    def forward(self, params: Params, tokens: jax.Array,
+                state: RecurrentState | None = None
+                ) -> tuple[jax.Array, RecurrentState | None]:
+        cfg = self.cfg
+        b, t = tokens.shape
+        h, n = cfg.num_rwkv_heads, cfg.rwkv_head_size
+        x = params["embed"][tokens]
+        if state is None:
+            zeros_d = jnp.zeros((cfg.num_layers, b, cfg.d_model), x.dtype)
+            state = RecurrentState(
+                zeros_d, zeros_d,
+                jnp.zeros((cfg.num_layers, b, h, n, n), jnp.float32),
+                jnp.zeros((b,), jnp.int32),
+            )
+
+        def body(carry, xs):
+            x = carry
+            block_p, tm_prev, cm_prev, wkv = xs
+            x, tm_new, cm_new, wkv_new = self._block(
+                block_p, x, tm_prev, cm_prev, wkv
+            )
+            return x, (tm_new, cm_new, wkv_new)
+
+        f = jax.checkpoint(body) if self.remat else body
+        x, (tm_s, cm_s, wkv_s) = jax.lax.scan(
+            f, x, (params["blocks"], state.tm_shift, state.cm_shift, state.wkv)
+        )
+        new_state = RecurrentState(
+            tm_s, cm_s, wkv_s, state.seq_lens + t
+        )
+        return L.rmsnorm(params["ln_f"], x, cfg.norm_eps), new_state
+
+    def loss(self, params: Params, batch: dict[str, jax.Array]):
+        h, _ = self.forward(params, batch["tokens"])
+        logits = self.shard(h @ params["head"], "logits")
+        xent = L.softmax_xent(logits, batch["labels"], batch.get("mask"))
+        return xent, {"xent": xent, "aux": jnp.float32(0.0)}
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def init_state(self, batch: int) -> RecurrentState:
+        cfg = self.cfg
+        h, n = cfg.num_rwkv_heads, cfg.rwkv_head_size
+        zeros_d = jnp.zeros((cfg.num_layers, batch, cfg.d_model), self.dtype)
+        return RecurrentState(
+            zeros_d, zeros_d,
+            jnp.zeros((cfg.num_layers, batch, h, n, n), jnp.float32),
+            jnp.zeros((batch,), jnp.int32),
+        )
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def prefill(self, params: Params, tokens: jax.Array,
+                prompt_lens: jax.Array, state: RecurrentState
+                ) -> tuple[jax.Array, RecurrentState]:
+        """NOTE: recurrences consume prompts sequentially; padded batches
+        assume right-aligned equal lengths for exactness (the serve engine
+        runs per-bucket).  Returns last-token logits + state."""
+        h, new_state = self.forward(params, tokens, state)
+        last = jnp.take_along_axis(
+            h, jnp.maximum(prompt_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        new_state = new_state._replace(
+            seq_lens=state.seq_lens + prompt_lens.astype(jnp.int32)
+        )
+        return last @ params["head"], new_state
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def decode_step(self, params: Params, tokens: jax.Array,
+                    state: RecurrentState
+                    ) -> tuple[jax.Array, RecurrentState]:
+        h, new_state = self.forward(params, tokens[:, None], state)
+        return h[:, 0] @ params["head"], new_state

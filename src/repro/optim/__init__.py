@@ -1,0 +1,7 @@
+"""Optimizers + distributed-optimization tricks (pure JAX)."""
+from repro.optim.adamw import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update, clip_by_global_norm,
+    cosine_schedule, global_norm,
+)
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "cosine_schedule", "global_norm"]

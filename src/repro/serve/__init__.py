@@ -1,0 +1,4 @@
+"""Serving: continuous batching over paged virtual memory (the "OS")."""
+from repro.serve.engine import Engine, Request, ServeConfig
+
+__all__ = ["Engine", "Request", "ServeConfig"]

@@ -1,0 +1,5 @@
+"""Fault-tolerant training loop + step factory + straggler detection."""
+from repro.train.loop import Trainer, make_train_step
+from repro.train.straggler import StragglerEvent, StragglerMonitor
+
+__all__ = ["StragglerEvent", "StragglerMonitor", "Trainer", "make_train_step"]

@@ -1,0 +1,197 @@
+"""Fault-tolerant training: step factory + auto-resuming loop.
+
+Large-fleet contract (DESIGN.md §3):
+  * step function is a pure jitted (params, opt_state, batch) -> (params,
+    opt_state, metrics) with optional microbatch gradient accumulation
+    (lax.scan over the micro axis — activation memory is bounded by one
+    microbatch);
+  * the loop auto-resumes from the newest atomic checkpoint, saves async
+    every N steps, takes an emergency checkpoint on SIGTERM/KeyboardInterrupt
+    (preemption), and re-raises unknown faults after checkpointing — a
+    restarted job continues bit-identically (the data stream is keyed by
+    step);
+  * heartbeat hook: called every step with (step, seconds); cluster-level
+    straggler mitigation watches these (the launcher wires it to its own
+    monitoring; here it feeds the perf counters).
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.core import PerfCounters
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(
+    model: Any,
+    opt_cfg: AdamWConfig,
+    *,
+    accum_steps: int = 1,
+    donate: bool = True,
+    grad_shardings: Any | None = None,
+) -> Callable:
+    """Build the jitted train step.  With ``accum_steps > 1`` the batch's
+    leading dim is split into microbatches and gradients are averaged in f32
+    before one optimizer update.
+
+    ``grad_shardings``: pytree of NamedShardings (the param shardings).
+    Constraining the gradients to the parameter layout turns GSPMD's
+    full-tensor gradient all-reduces into reduce-scatters — each device
+    only ever owns the shard it will apply (§Perf cell B iteration 2)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, grads, grad_shardings
+        )
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        grads = constrain(grads)
+        params, opt_state, opt_m = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        return params, opt_state, {**metrics, **opt_m, "loss": loss}
+
+    def accumulated(params, opt_state, batch):
+        def micro(batch_i):
+            b = jax.tree.map(
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                )[batch_i] if hasattr(x, "shape") and x.ndim >= 1 else x,
+                batch,
+            )
+            return b
+
+        def scan_body(carry, i):
+            g_acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, micro(i))
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                g_acc, grads,
+            )
+            return (g_acc, loss_acc + loss / accum_steps), None
+
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (grads, loss), _ = jax.lax.scan(
+            scan_body, (g0, jnp.float32(0.0)), jnp.arange(accum_steps)
+        )
+        grads = constrain(grads)
+        params, opt_state, opt_m = adamw_update(
+            grads, opt_state, params, opt_cfg
+        )
+        return params, opt_state, {**opt_m, "loss": loss}
+
+    fn = single if accum_steps == 1 else accumulated
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(fn, donate_argnums=donate_argnums)
+
+
+class Trainer:
+    """Auto-resuming training loop with preemption-safe checkpointing."""
+
+    def __init__(
+        self,
+        model: Any,
+        opt_cfg: AdamWConfig,
+        *,
+        ckpt_dir: str,
+        ckpt_every: int = 50,
+        keep: int = 3,
+        accum_steps: int = 1,
+        heartbeat: Callable[[int, float], None] | None = None,
+    ):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.accum_steps = accum_steps
+        self.heartbeat = heartbeat
+        self.counters = PerfCounters()
+        self.checkpointer = ckpt.AsyncCheckpointer(ckpt_dir, keep=keep)
+        self.step_fn = make_train_step(model, opt_cfg, accum_steps=accum_steps)
+        self._preempted = False
+
+    # ------------------------------------------------------------------
+
+    def init_or_restore(self, key) -> tuple[Any, Any, int]:
+        """Fresh init, or resume from the newest checkpoint."""
+        params = self.model.init(key)
+        opt_state = adamw_init(params, self.opt_cfg.moment_dtype)
+        latest = ckpt.latest_step(self.ckpt_dir)
+        if latest is None:
+            return params, opt_state, 0
+        tree = {"params": params, "opt": opt_state}
+        restored = ckpt.restore(self.ckpt_dir, latest, tree)
+        self.counters.snapshot("resumed", latest)
+        return restored["params"], restored["opt"], latest
+
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    # ------------------------------------------------------------------
+
+    def run(
+        self,
+        params: Any,
+        opt_state: Any,
+        batches: Callable[[int], dict[str, Any]],
+        start_step: int,
+        num_steps: int,
+        log_every: int = 10,
+    ) -> tuple[Any, Any, list[dict[str, float]]]:
+        self._install_preemption_handler()
+        history: list[dict[str, float]] = []
+        step = start_step
+        try:
+            for step in range(start_step, num_steps):
+                t0 = time.perf_counter()
+                batch = batches(step)
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, batch
+                )
+                if step % log_every == 0 or step == num_steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step
+                    history.append(m)
+                dt = time.perf_counter() - t0
+                self.counters.inc("steps")
+                if self.heartbeat:
+                    self.heartbeat(step, dt)
+                if (step + 1) % self.ckpt_every == 0:
+                    self.checkpointer.save_async(
+                        step + 1, {"params": params, "opt": opt_state}
+                    )
+                if self._preempted:
+                    raise KeyboardInterrupt("preemption signal")
+        except (KeyboardInterrupt, SystemExit):
+            # emergency checkpoint, then surface the preemption
+            self.checkpointer.wait()
+            ckpt.save(self.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt_state})
+            self.counters.snapshot("preempt_checkpoint", step + 1)
+            raise
+        self.checkpointer.wait()
+        ckpt.save(self.ckpt_dir, num_steps, {"params": params, "opt": opt_state})
+        return params, opt_state, history

@@ -1,0 +1,157 @@
+"""Benchmark-harness validation: RiVEC kernels vs NumPy oracles, cycle-model
+sanity, TLB-sweep paper claims, HLO cost-model parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import bench_rivec
+from benchmarks.rivec_kernels import KERNELS
+
+
+class TestRiVECKernels:
+    """Numerical correctness of the vectorized kernels (simtiny size)."""
+
+    def test_axpy(self):
+        out, _ = KERNELS["axpy"]("simtiny")
+        assert out.shape == (1024,)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_blackscholes_positive_prices(self):
+        out, _ = KERNELS["blackscholes"]("simtiny")
+        assert (np.asarray(out) >= -1e-4).all()  # f32 rounding at the ATM edge
+
+    def test_matmul_vs_numpy(self):
+        c, _ = KERNELS["matmul"]("simtiny")
+        # regenerate inputs the same way
+        from benchmarks.rivec_kernels import _key
+        k = _key("matmul", "simtiny")
+        a = jax.random.normal(k, (64, 64))
+        b = jax.random.normal(jax.random.fold_in(k, 1), (64, 64))
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a) @ np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_spmv_vs_numpy(self):
+        out, w = KERNELS["spmv"]("simtiny")
+        rng = np.random.default_rng(42)
+        n, nnz = 64, 5
+        cols = rng.integers(0, n, size=(n, nnz)).astype(np.int32)
+        vals = rng.normal(size=(n, nnz)).astype(np.float32)
+        x = rng.normal(size=(n,)).astype(np.float32)
+        expect = (vals * x[cols]).sum(1)
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5,
+                                   atol=1e-5)
+        assert w.indexed_elems == n * nnz  # per-element translation counted
+
+    def test_pathfinder_monotone(self):
+        out, _ = KERNELS["pathfinder"]("simtiny")
+        assert (np.asarray(out) >= 0).all()
+
+    def test_all_kernels_run_and_report_work(self):
+        for name, fn in KERNELS.items():
+            out, w = fn("simtiny")
+            jax.block_until_ready(out)
+            assert w.elems > 0, name
+            assert w.avg_vl >= 1, name
+
+
+class TestCycleModel:
+    def test_canneal_slower_than_scalar(self):
+        _, w = KERNELS["canneal"]("simtiny")
+        s = bench_rivec.scalar_cycles("canneal", w)
+        v = bench_rivec.vector_cycles("canneal", w, unordered=False)
+        assert s / v < 1.0  # the paper's headline regression
+
+    def test_unordered_never_slower(self):
+        for name, fn in KERNELS.items():
+            _, w = fn("simtiny")
+            v = bench_rivec.vector_cycles(name, w, unordered=False)
+            vu = bench_rivec.vector_cycles(name, w, unordered=True)
+            assert vu <= v * 1.0001, name
+
+    def test_spmv_speedup_grows_with_size(self):
+        sp = {}
+        for size in ("simtiny", "simlarge"):
+            _, w = KERNELS["spmv"](size)
+            sp[size] = (bench_rivec.scalar_cycles("spmv", w)
+                        / bench_rivec.vector_cycles("spmv", w, True))
+        assert sp["simlarge"] > sp["simtiny"]  # longer rows vectorize better
+
+    def test_geomean_in_paper_band(self):
+        rows = bench_rivec.run_table()
+        gm = bench_rivec.geomean(
+            [r["simlarge"]["V_speedup"] for r in rows]
+        )
+        assert 2.0 < gm < 4.5  # paper: 2.7-3.2x
+
+
+class TestTLBSweepClaims:
+    def test_paper_claims_hold(self):
+        from benchmarks.bench_tlb_sweep import sweep
+
+        results = sweep()
+        for label, by in results.items():
+            for entries in (16, 32, 64, 128):
+                assert by[entries]["total"] < 0.035, (label, entries)
+            assert by[128]["total"] < 0.01, label
+        # bigger problems need more PTEs before the TLB covers the dataset
+        # (longer vectors hide the misses, so compare hit rates, not stalls)
+        assert results["96p"][16]["hit_rate"] < results["6p"][16]["hit_rate"]
+        assert results["24p"][8]["hit_rate"] < results["6p"][8]["hit_rate"]
+
+
+class TestHloCostModel:
+    HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %y)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %r = f32[8,8] get-tuple-element(%w), index=1
+  %ag = f32[16,8] all-gather(%r), replica_groups={}
+  %red = f32[8,8] slice(%ag), slice={[0:8], [0:8]}
+  ROOT %out = f32[8,8] add(%red, %r)
+}
+"""
+
+    def test_loop_multiplied_flops(self):
+        from repro.launch.hlo_cost import analyze
+
+        r = analyze(self.HLO)
+        # dot: 2*8*8*8 = 1024 flops x 5 trips
+        assert r["flops"] >= 1024 * 5
+        assert r["flops"] < 1024 * 5 + 2000  # adds only elementwise slack
+
+    def test_collectives_counted(self):
+        from repro.launch.hlo_cost import analyze
+
+        r = analyze(self.HLO)
+        assert r["collective_bytes"] == 16 * 8 * 2  # f32 @ bf16-wire rule
+        assert r["collective_counts"]["all-gather"] == 1
+
+    def test_shape_parsing(self):
+        from repro.launch.hlo_cost import _bytes_of, _elems_of
+
+        assert _bytes_of("bf16[4,4]") == 32
+        assert _bytes_of("(f32[2,2], s32[3])") == 28
+        assert _elems_of("pred[7]") == 7

@@ -1,0 +1,221 @@
+"""Unit + property tests for the paged virtual-memory core (DESIGN.md §3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    INVALID_PAGE,
+    OutOfPagesError,
+    PageFault,
+    PagePool,
+    VMemConfig,
+    VirtualMemory,
+    burst_trace,
+    element_trace,
+    logical_to_physical,
+)
+
+
+# ---------------------------------------------------------------------------
+# PagePool
+# ---------------------------------------------------------------------------
+
+
+class TestPagePool:
+    def test_alloc_free_roundtrip(self):
+        pool = PagePool(8)
+        pages = pool.alloc(5)
+        assert len(set(pages)) == 5
+        assert pool.num_free == 3
+        pool.free(pages)
+        assert pool.num_free == 8
+        pool.check_invariants()
+
+    def test_oom_raises_and_leaves_state(self):
+        pool = PagePool(4)
+        pool.alloc(3)
+        with pytest.raises(OutOfPagesError):
+            pool.alloc(2)
+        assert pool.num_free == 1
+        pool.check_invariants()
+
+    def test_double_free_detected(self):
+        pool = PagePool(4)
+        (p,) = pool.alloc(1)
+        pool.free([p])
+        with pytest.raises(ValueError, match="double free"):
+            pool.free([p])
+
+    def test_share_refcounting(self):
+        pool = PagePool(4)
+        (p,) = pool.alloc(1)
+        pool.share(p)
+        pool.free([p])
+        assert pool.num_free == 3  # still referenced
+        pool.free([p])
+        assert pool.num_free == 4
+        pool.check_invariants()
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=60))
+    def test_random_ops_keep_invariants(self, ops):
+        """Allocator invariants hold under arbitrary alloc/free/share streams."""
+        pool = PagePool(16)
+        live: list[int] = []
+        for op in ops:
+            if op == 0 and pool.num_free:
+                live += pool.alloc(1)
+            elif op == 1 and live:
+                p = live.pop()
+                pool.free([p])
+            elif op == 2 and live:
+                live.append(pool.share(live[-1]))
+            pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# VirtualMemory: mapping, translation, faults
+# ---------------------------------------------------------------------------
+
+
+CFG = VMemConfig(page_size=16, num_pages=64, max_pages_per_seq=16, max_seqs=4)
+
+
+class TestVirtualMemory:
+    def test_map_translate_unmap(self):
+        vm = VirtualMemory(CFG)
+        vm.map_seq(7, 40)
+        phys = vm.translate(7, np.arange(40))
+        # within each 16-token page, offsets are contiguous
+        offs = phys % CFG.page_size
+        np.testing.assert_array_equal(offs, np.arange(40) % 16)
+        vm.unmap_seq(7)
+        assert vm.pool.num_free == CFG.num_pages
+        vm.check_invariants()
+
+    def test_translation_matches_device_function(self):
+        import jax.numpy as jnp
+
+        vm = VirtualMemory(CFG)
+        vm.map_seq(1, 50)
+        pos = np.arange(50)
+        host = vm.translate(1, pos)
+        row = vm.device_page_table()[vm.seq(1).slot]
+        dev = logical_to_physical(jnp.asarray(pos), row, CFG.page_size)
+        np.testing.assert_array_equal(host, np.asarray(dev))
+
+    def test_fault_vstart_is_first_bad_element(self):
+        vm = VirtualMemory(CFG)
+        vm.map_seq(0, 10)
+        with pytest.raises(PageFault) as ei:
+            vm.translate(0, np.array([3, 9, 10, 11]))
+        assert ei.value.vstart == 2  # elements [0,2) committed
+
+    def test_append_faults_on_page_crossing(self):
+        vm = VirtualMemory(CFG)
+        vm.map_seq(0, 16)  # exactly one full page
+        faults = vm.append_tokens(0, 1)
+        assert len(faults) == 1 and faults[0].logical_page == 1
+        assert vm.append_tokens(0, 14) == []  # room in tail page
+        assert len(vm.append_tokens(0, 2)) == 1
+        vm.check_invariants()
+
+    def test_append_oom_is_precise(self):
+        """OOM during append leaves the sequence unmodified (C5 semantics)."""
+        vm = VirtualMemory(VMemConfig(page_size=4, num_pages=2, max_pages_per_seq=8, max_seqs=2))
+        vm.map_seq(0, 8)  # uses both pages
+        with pytest.raises(OutOfPagesError):
+            vm.append_tokens(0, 4)
+        assert vm.seq_len(0) == 8
+        vm.check_invariants()
+
+    def test_no_aliasing_across_sequences(self):
+        """Distinct (seq, position) never map to the same physical slot."""
+        vm = VirtualMemory(CFG)
+        vm.map_seq(0, 33)
+        vm.map_seq(1, 50)
+        a = vm.translate(0, np.arange(33))
+        b = vm.translate(1, np.arange(50))
+        assert not set(a.tolist()) & set(b.tolist())
+
+    def test_fork_shares_whole_pages_only(self):
+        vm = VirtualMemory(CFG)
+        vm.map_seq(0, 40)  # 3 pages (2 full + 1 partial)
+        vm.fork_seq(0, 1, 40)
+        parent, child = vm.seq(0), vm.seq(1)
+        assert child.pages[:2] == parent.pages[:2]      # shared full pages
+        assert child.pages[2] != parent.pages[2]        # copied tail
+        assert vm.pool.refcount(parent.pages[0]) == 2
+        vm.unmap_seq(0)
+        assert vm.pool.refcount(child.pages[0]) == 1    # survives parent
+        vm.check_invariants()
+
+    def test_slot_exhaustion(self):
+        vm = VirtualMemory(CFG)
+        for i in range(CFG.max_seqs):
+            vm.map_seq(i, 4)
+        with pytest.raises(OutOfPagesError, match="slots"):
+            vm.map_seq(99, 4)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 3), st.integers(0, 3), st.integers(1, 24)),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    def test_random_lifecycle_keeps_invariants(self, ops):
+        """map/append/unmap streams preserve all vmem invariants."""
+        vm = VirtualMemory(CFG)
+        for kind, seq_id, n in ops:
+            try:
+                if kind == 0 and not vm.has_seq(seq_id):
+                    vm.map_seq(seq_id, n)
+                elif kind == 1 and vm.has_seq(seq_id):
+                    vm.append_tokens(seq_id, n)
+                elif kind == 2 and vm.has_seq(seq_id):
+                    vm.unmap_seq(seq_id)
+                elif kind == 3 and vm.has_seq(seq_id):
+                    length = vm.seq_len(seq_id)
+                    phys = vm.translate(seq_id, np.arange(length))
+                    assert len(set(phys.tolist())) == length
+            except (OutOfPagesError, ValueError):
+                pass
+            vm.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Address traces (C2: burst vs element translation)
+# ---------------------------------------------------------------------------
+
+
+class TestTraces:
+    def test_burst_one_translation_per_page(self):
+        tr = burst_trace(np.arange(64), page_size=16)
+        np.testing.assert_array_equal(tr, [0, 1, 2, 3])
+
+    def test_burst_non_contiguous_runs(self):
+        tr = burst_trace(np.array([0, 1, 40, 41, 42, 5]), page_size=16)
+        np.testing.assert_array_equal(tr, [0, 2, 0])
+
+    def test_element_translates_everything(self):
+        pos = np.array([0, 1, 2, 17, 17, 40])
+        tr = element_trace(pos, page_size=16)
+        assert tr.shape == pos.shape
+        np.testing.assert_array_equal(tr, [0, 0, 0, 1, 1, 2])
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 10_000), min_size=1, max_size=200))
+    def test_burst_never_more_translations_than_element(self, positions):
+        pos = np.asarray(positions)
+        assert burst_trace(pos, 16).size <= element_trace(pos, 16).size
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 512), st.integers(0, 1000))
+    def test_unit_stride_burst_count_is_pages_touched(self, n, start):
+        pos = np.arange(start, start + n)
+        expected = len(np.unique(pos // 16))
+        assert burst_trace(pos, 16).size == expected

@@ -1,0 +1,195 @@
+"""Serving-engine tests: continuous batching, faults, preemption, OS costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CostModel
+from repro.models import build_model
+from repro.serve import Engine, Request, ServeConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    return cfg, model, model.init(KEY)
+
+
+def make_requests(cfg, n, rng, max_new=10):
+    return [
+        Request(
+            req_id=i,
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(4, 12))
+            ).astype(np.int32),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+class TestEngine:
+    def test_all_requests_complete(self, model_and_params):
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=128, max_pages_per_seq=16, max_batch=4))
+        rng = np.random.default_rng(0)
+        for r in make_requests(cfg, 7, rng):
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 7
+        assert all(len(r.output) == 10 for r in done.values())
+        eng.vmem.check_invariants()
+
+    def test_preemption_transparency(self, model_and_params):
+        """Greedy outputs are bit-identical with and without preemption —
+        the paper's C5/C6 correctness contract end to end."""
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(1)
+        reqs = make_requests(cfg, 6, rng, max_new=12)
+
+        tiny = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=16, max_pages_per_seq=16, max_batch=3))
+        big = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=512, max_pages_per_seq=16, max_batch=6))
+        import copy
+        for r in reqs:
+            tiny.submit(copy.deepcopy(r))
+        for r in reqs:
+            big.submit(copy.deepcopy(r))
+        done_t = tiny.run()
+        done_b = big.run()
+        assert tiny.stats()["counters"].get("preemptions", 0) > 0
+        assert big.stats()["counters"].get("preemptions", 0) == 0
+        for i in range(6):
+            a = [int(x) for x in done_t[i].output]
+            b = [int(x) for x in done_b[i].output]
+            assert a == b, f"req {i} diverged under preemption"
+
+    def test_page_faults_counted(self, model_and_params):
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=128, max_pages_per_seq=16, max_batch=2))
+        rng = np.random.default_rng(2)
+        for r in make_requests(cfg, 2, rng, max_new=9):
+            eng.submit(r)
+        eng.run()
+        s = eng.stats()
+        # 9 decode steps crossing 4-token pages -> at least 2 faults/request
+        assert s["counters"]["page_faults"] >= 4
+        assert s["counters"]["modeled_fault_cycles"] > 0
+
+    def test_context_switch_cost_accounting(self, model_and_params):
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=16, max_pages_per_seq=16, max_batch=3))
+        rng = np.random.default_rng(3)
+        for r in make_requests(cfg, 5, rng, max_new=12):
+            eng.submit(r)
+        eng.run()
+        st = eng.switcher.stats
+        if st.switches:
+            assert st.bytes_spilled == st.bytes_restored
+            # modeled cycles: >= scalar switch + data movement per switch
+            cost = CostModel()
+            assert st.modeled_cycles >= st.switches * (
+                cost.scalar_ctx_switch_cycles
+            )
+
+    def test_queue_longer_than_slots(self, model_and_params):
+        """Admission control: more requests than device slots."""
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=256, max_pages_per_seq=16, max_batch=2))
+        rng = np.random.default_rng(4)
+        for r in make_requests(cfg, 9, rng, max_new=6):
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 9
+        assert eng.vmem.num_seqs == 0  # everything unmapped at the end
+
+    def test_scheduler_tick_accounting(self, model_and_params):
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=256, max_pages_per_seq=16, max_batch=4,
+            tick_every_steps=2))
+        rng = np.random.default_rng(5)
+        for r in make_requests(cfg, 4, rng, max_new=8):
+            eng.submit(r)
+        eng.run()
+        s = eng.stats()
+        assert s["counters"]["ticks"] >= 3
+        assert s["counters"]["modeled_tick_cycles"] == (
+            s["counters"]["ticks"] * CostModel().sched_tick_cycles
+        )
+
+
+def test_heavy_preemption_cascade(model_and_params):
+    """Regression: a victim spilled while servicing another request's fault
+    must not corrupt the decode step (engine once KeyError'd here); even
+    total-preemption steps terminate and produce exact outputs."""
+    import copy
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(9)
+    reqs = [
+        Request(req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(5, 14))
+                                    ).astype(np.int32),
+                max_new_tokens=16)
+        for i in range(8)
+    ]
+    tiny = Engine(model, params, ServeConfig(
+        page_size=4, num_pages=16, max_pages_per_seq=16, max_batch=3))
+    big = Engine(model, params, ServeConfig(
+        page_size=4, num_pages=1024, max_pages_per_seq=16, max_batch=8))
+    for r in reqs:
+        tiny.submit(copy.deepcopy(r))
+    for r in reqs:
+        big.submit(copy.deepcopy(r))
+    done_t, done_b = tiny.run(), big.run()
+    assert len(done_t) == 8
+    assert tiny.stats()["counters"].get("preemptions", 0) >= 3
+    for i in range(8):
+        assert [int(x) for x in done_t[i].output] == \
+            [int(x) for x in done_b[i].output], i
+    tiny.vmem.check_invariants()
+
+
+def test_prefix_sharing_exact(model_and_params):
+    """System-prompt caching: requests forked from a resident prefix share
+    its whole pages by refcount (copy-only-the-tail-page) and produce
+    outputs bit-identical to full-prompt prefill.  Also regression-covers
+    the idle-row clobber bug (a mapped-but-idle sequence's page 0 must not
+    receive inactive-lane writes)."""
+    cfg, model, params = model_and_params
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, size=22).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+             for _ in range(3)]
+
+    shared = Engine(model, params, ServeConfig(
+        page_size=4, num_pages=64, max_pages_per_seq=32, max_batch=4))
+    shared.preload_prefix(prefix)
+    for i, t in enumerate(tails):
+        shared.submit(Request(req_id=i, prompt=t, max_new_tokens=8,
+                              share_prefix=True))
+    done_s = shared.run()
+    # whole prefix pages are multi-referenced while children run; invariants
+    shared.vmem.check_invariants()
+    assert shared.counters.get("forked_admissions") == 3
+
+    full = Engine(model, params, ServeConfig(
+        page_size=4, num_pages=256, max_pages_per_seq=32, max_batch=4))
+    for i, t in enumerate(tails):
+        full.submit(Request(req_id=i, prompt=np.concatenate([prefix, t]),
+                            max_new_tokens=8))
+    done_f = full.run()
+    for i in range(3):
+        assert [int(x) for x in done_s[i].output] == \
+            [int(x) for x in done_f[i].output], i

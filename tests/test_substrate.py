@@ -1,0 +1,239 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, compression,
+fault-tolerant trainer."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMStream
+from repro.models import build_model
+from repro.models.config import ShapeConfig
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.compression import compress_decompress, init_error_state
+from repro.train import Trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(base_lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        lrs = [float(cosine_schedule(jnp.int32(s), cfg)) for s in
+               (0, 5, 10, 55, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert 0.1 < lrs[3] < 1.0
+        assert lrs[4] == pytest.approx(0.1)
+
+    def test_clipping(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(20.0)
+        assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_adamw_moves_toward_minimum(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw_init(params)
+        cfg = AdamWConfig(base_lr=0.5, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0)
+        for _ in range(100):
+            grads = {"w": params["w"]}  # d/dw of w^2/2
+            params, state, _ = adamw_update(grads, state, params, cfg)
+        assert np.abs(np.asarray(params["w"])).max() < 0.5
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.01, 10.0))
+    def test_bias_correction_first_step(self, g0):
+        """After one step from zero moments, update ~ lr (sign descent)."""
+        params = {"w": jnp.array([0.0])}
+        state = adamw_init(params)
+        cfg = AdamWConfig(base_lr=1e-2, warmup_steps=0, total_steps=100_000,
+                          weight_decay=0.0)
+        params, _, _ = adamw_update({"w": jnp.array([g0])}, state, params, cfg)
+        assert float(params["w"][0]) == pytest.approx(-1e-2, rel=1e-2)
+
+
+class TestCompression:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_error_feedback_unbiased_over_time(self, seed):
+        """Accumulated compressed updates converge to accumulated true."""
+        rng = np.random.default_rng(seed)
+        x_true = jnp.zeros((64,))
+        err = jnp.zeros((64,))
+        acc_hat = np.zeros((64,))
+        acc_true = np.zeros((64,))
+        for _ in range(20):
+            g = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+            g_hat, err = compress_decompress(g, err)
+            acc_hat += np.asarray(g_hat)
+            acc_true += np.asarray(g)
+        # residual bounded by one quantization step, not accumulated
+        resid = np.abs(acc_hat - acc_true).max()
+        assert resid <= np.abs(acc_true).max() * 0.2 + 0.2
+
+    def test_wire_format_is_int8(self):
+        from repro.optim.compression import quantize_int8
+        q, scale = quantize_int8(jnp.asarray(np.random.randn(128) * 3))
+        assert q.dtype == jnp.int8
+        assert float(scale) > 0
+
+
+class TestCheckpoint:
+    def test_atomic_roundtrip(self):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "nested": {"b": jnp.ones((2,), jnp.int32)}}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 7, tree)
+            assert ckpt.latest_step(d) == 7
+            out = ckpt.restore(d, 7, jax.eval_shape(lambda: tree))
+            np.testing.assert_array_equal(np.asarray(out["a"]),
+                                          np.asarray(tree["a"]))
+            np.testing.assert_array_equal(np.asarray(out["nested"]["b"]),
+                                          np.asarray(tree["nested"]["b"]))
+
+    def test_garbage_collection_keeps_newest(self):
+        tree = {"x": jnp.zeros((2,))}
+        with tempfile.TemporaryDirectory() as d:
+            for s in (1, 2, 3, 4):
+                ckpt.save(d, s, tree)
+            ckpt.garbage_collect(d, keep=2)
+            steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                           if n.startswith("step_"))
+            assert steps == [3, 4]
+
+    def test_async_checkpointer(self):
+        tree = {"x": jnp.arange(4.0)}
+        with tempfile.TemporaryDirectory() as d:
+            ac = ckpt.AsyncCheckpointer(d, keep=2)
+            ac.save_async(1, tree)
+            ac.wait()
+            assert ckpt.latest_step(d) == 1
+
+    def test_missing_leaf_is_loud(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 1, {"a": jnp.zeros((2,))})
+            with pytest.raises(ValueError, match="missing leaves"):
+                ckpt.restore(d, 1, {"a": jnp.zeros((2,)),
+                                    "b": jnp.zeros((3,))})
+
+
+class TestDataPipeline:
+    def test_deterministic_by_step(self):
+        cfg = get_config("granite-8b", reduced=True)
+        shape = ShapeConfig("t", 16, 4, "train")
+        s1 = SyntheticLMStream(cfg, shape)
+        s2 = SyntheticLMStream(cfg, shape)
+        b1, b2 = s1.batch(5), s2.batch(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        b3 = s1.batch(6)
+        assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+    def test_shapes_and_mask(self):
+        cfg = get_config("qwen2-vl-7b", reduced=True)
+        shape = ShapeConfig("t", 32, 4, "train")
+        b = SyntheticLMStream(cfg, shape).batch(0)
+        assert b["tokens"].shape == (4, 32)
+        assert b["positions"].shape == (3, 4, 32)
+        assert b["vision_embeds"].shape[0] == 4
+        assert set(np.unique(b["mask"])) <= {0.0, 1.0}
+        assert (b["mask"] == 0).any()  # document boundaries exist
+
+    def test_audio_batch_has_codebooks(self):
+        cfg = get_config("musicgen-large", reduced=True)
+        shape = ShapeConfig("t", 16, 2, "train")
+        b = SyntheticLMStream(cfg, shape).batch(0)
+        assert b["tokens"].shape == (2, 16, cfg.num_codebooks)
+
+
+class TestTrainerFaultTolerance:
+    def test_resume_is_bit_identical(self):
+        """20 straight steps == 10 steps + crash + resume + 10 steps."""
+        cfg = get_config("granite-8b", reduced=True)
+        model = build_model(cfg, remat=False)
+        shape = ShapeConfig("t", 16, 4, "train")
+        stream = SyntheticLMStream(cfg, shape)
+        opt = AdamWConfig(base_lr=1e-3, warmup_steps=2, total_steps=30)
+        batch_fn = lambda s: {k: jnp.asarray(v)
+                              for k, v in stream.batch(s).items()}
+
+        with tempfile.TemporaryDirectory() as d1:
+            tr = Trainer(model, opt, ckpt_dir=d1, ckpt_every=100)
+            p, o, s0 = tr.init_or_restore(KEY)
+            p_straight, _, _ = tr.run(p, o, batch_fn, s0, 20)
+
+        with tempfile.TemporaryDirectory() as d2:
+            tr1 = Trainer(model, opt, ckpt_dir=d2, ckpt_every=10)
+            p, o, s0 = tr1.init_or_restore(KEY)
+            tr1.run(p, o, batch_fn, s0, 10)
+            # "crash": new trainer object resumes from disk
+            tr2 = Trainer(model, opt, ckpt_dir=d2, ckpt_every=10)
+            p2, o2, s2 = tr2.init_or_restore(jax.random.PRNGKey(999))
+            assert s2 == 10
+            p_resumed, _, _ = tr2.run(p2, o2, batch_fn, s2, 20)
+
+        for a, b in zip(jax.tree.leaves(p_straight),
+                        jax.tree.leaves(p_resumed)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-6, atol=1e-6,
+            )
+
+
+class TestStragglerMonitor:
+    def test_flags_slow_step_and_ewma_excludes_it(self):
+        from repro.train import StragglerMonitor
+
+        fired = []
+        mon = StragglerMonitor(threshold=3.0, warmup_steps=3,
+                               on_straggler=fired.append)
+        for step in range(10):
+            assert not mon.heartbeat(step, 0.1)
+        assert mon.heartbeat(10, 1.0)          # 10x the EWMA
+        assert fired and fired[0].ratio > 3
+        # the outlier must not be absorbed into the EWMA
+        assert abs(mon.ewma - 0.1) < 0.02
+        assert mon.heartbeat(11, 1.0)          # persistent straggler refires
+
+    def test_warmup_suppresses(self):
+        from repro.train import StragglerMonitor
+
+        mon = StragglerMonitor(threshold=2.0, warmup_steps=5)
+        assert not mon.heartbeat(0, 0.1)
+        assert not mon.heartbeat(1, 10.0)      # within warmup
+
+    def test_gradual_drift_adapts(self):
+        from repro.train import StragglerMonitor
+
+        mon = StragglerMonitor(threshold=3.0, alpha=0.5, warmup_steps=2)
+        t = 0.1
+        for step in range(30):
+            flagged = mon.heartbeat(step, t)
+            assert not flagged, (step, t, mon.ewma)
+            t *= 1.2                            # slow drift, never 3x EWMA
+
+
+class TestPageSizeSweep:
+    def test_tradeoff_monotonicity(self):
+        from benchmarks.bench_page_size import run_trace
+
+        r8, r64 = run_trace(8), run_trace(64)
+        assert r8["tx_per_token"] > r64["tx_per_token"]       # more bursts
+        assert r8["fragmentation"] < r64["fragmentation"]     # less waste

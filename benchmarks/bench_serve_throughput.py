@@ -1,0 +1,122 @@
+"""Serving split before/after: decode rate + context-switch bytes moved.
+
+Runs the same preempting workload through the frozen seed engine
+(``repro.serve.reference.ReferenceEngine``, monolithic host loop: full
+page-table re-upload each step, full-pool stack+reshape per spill/restore)
+and the refactored Scheduler/Executor engine (persistent delta-updated
+device page table, donated jitted steps, page-granular spill), and reports:
+
+  * decode steps/s (wall; CPU-interpret numbers — the *ratio* is the
+    signal, absolute rates are hardware-dependent);
+  * spill/restore bytes actually moved per context switch.  The seed's
+    *counter* already counted victim pages only, so its data-plane
+    pathology is reported separately as ``touched`` bytes: every seed
+    spill stacks both full pools (2 x pool bytes) and every restore
+    rebuilds them (2 x more), regardless of victim size;
+  * page-table rows uploaded to the device per decode step (seed: all
+    ``max_batch`` rows, every step).
+"""
+
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+
+def _workload(cfg, n=6, seed=0, max_new=12):
+    from repro.serve import Request
+
+    rng = np.random.default_rng(seed)
+    return [
+        Request(req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(6, 16))
+                                    ).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _drive(eng, reqs):
+    for r in reqs:
+        eng.submit(copy.deepcopy(r))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    return done, wall
+
+
+def main() -> list[str]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import Engine, ReferenceEngine, ServeConfig
+
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    serve_cfg = ServeConfig(page_size=4, num_pages=16, max_pages_per_seq=16,
+                            max_batch=3)
+    reqs = _workload(cfg)
+
+    results = {}
+    for name, eng_cls in (("seed", ReferenceEngine), ("split", Engine)):
+        # warm the jit caches so the timed run measures steady-state decode
+        _drive(eng_cls(model, params, serve_cfg), _workload(cfg, n=2, seed=1,
+                                                            max_new=3))
+        eng = eng_cls(model, params, serve_cfg)
+        done, wall = _drive(eng, reqs)
+        c = eng.counters
+        steps = c.get("decode_tokens")
+        st = eng.switcher.stats
+        kp = eng.kv.k_pools
+        n_layers, n_frames, page, hkv, hd = kp.shape
+        per_page = n_layers * page * hkv * hd * kp.dtype.itemsize
+        pool_bytes = n_frames * per_page
+        if name == "seed":
+            # data plane actually touched: jnp.stack of BOTH full pools on
+            # every spill and every restore, plus the full-pool rebuild
+            # after the restore scatter (2x pool each time)
+            touched = (st.switches + c.get("restores")) * 2 * pool_bytes
+            # full [max_batch, max_pages] table re-uploaded on every engine
+            # step that decoded (upper-bounded by total steps)
+            ptab_rows = eng._step_i * eng.cfg.max_batch
+        else:
+            touched = st.bytes_spilled + st.bytes_restored
+            ptab_rows = c.get("ptab_rows_uploaded")
+        decode_s = c.seconds("decode") or wall
+        results[name] = dict(
+            wall=wall, tokens=sum(len(r.output) for r in done.values()),
+            decode_steps=steps, decode_seconds=decode_s,
+            switches=st.switches, moved=st.bytes_spilled + st.bytes_restored,
+            touched=touched, ptab_rows=ptab_rows,
+        )
+        print(f"{name:>6}: {results[name]['tokens']} tokens in {wall:.1f}s, "
+              f"{st.switches} switches, "
+              f"{results[name]['moved']} B victim pages moved, "
+              f"{touched} B pool bytes touched, "
+              f"{ptab_rows} page-table rows uploaded")
+
+    seed, split = results["seed"], results["split"]
+    rate_seed = seed["decode_steps"] / max(seed["decode_seconds"], 1e-9)
+    rate_split = split["decode_steps"] / max(split["decode_seconds"], 1e-9)
+    print(f"decode tokens/s: seed {rate_seed:.1f} -> split {rate_split:.1f} "
+          f"({rate_split / max(rate_seed, 1e-9):.2f}x, CPU interpret)")
+    print(f"bytes touched per switch: seed "
+          f"{seed['touched'] // max(seed['switches'], 1)} -> split "
+          f"{split['touched'] // max(split['switches'], 1)}")
+    return [
+        f"serve_decode_tok_per_s_seed,0,{rate_seed:.2f}",
+        f"serve_decode_tok_per_s_split,0,{rate_split:.2f}",
+        f"serve_ctx_bytes_touched_seed,0,{seed['touched']}",
+        f"serve_ctx_bytes_touched_split,0,{split['touched']}",
+        f"serve_ptab_rows_uploaded_seed,0,{seed['ptab_rows']}",
+        f"serve_ptab_rows_uploaded_split,0,{split['ptab_rows']}",
+    ]
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,10 @@ def main() -> None:
     from benchmarks import bench_context_switch
     csv += bench_context_switch.main()
 
+    section("Serving split: seed vs Scheduler/Executor (decode + switches)")
+    from benchmarks import bench_serve_throughput
+    csv += bench_serve_throughput.main()
+
     section("C2: translation counts (burst / element / coalesced)")
     from benchmarks import bench_translation
     csv += bench_translation.main()

@@ -1,11 +1,14 @@
 """Serving example: continuous batching with paged KV + forced preemption.
 
-A small transformer serves a queue of batched requests through the paged
-virtual-memory engine.  The pool is deliberately undersized, so the engine
-must take page faults (on-demand allocation) and context-switch requests
-out and back in (the paper's §3.1 measurement, reproduced functionally).
-Outputs are verified identical to a run with an abundant pool —
-preemption transparency.
+A small transformer serves a queue of batched requests through the split
+serving engine — host-side Scheduler (admission, victim selection: the
+CVA6/OS plane) driving a device-resident Executor (KV pools, persistent
+delta-updated page table, page-granular spills: the Ara2 data plane).
+The pool is deliberately undersized, so the scheduler must take page
+faults (on-demand allocation) and context-switch requests out and back in
+(the paper's §3.1 measurement, reproduced functionally).  Outputs are
+verified identical to a run with an abundant pool — preemption
+transparency.
 
 Run:  PYTHONPATH=src python examples/serve_continuous_batching.py
 """
@@ -68,11 +71,18 @@ def main() -> None:
     print(f"  restores:         {st['counters'].get('restores', 0)}")
     sw = st["switch_stats"]
     print(f"  ctx-switch bytes: {sw['bytes_spilled']} spilled / "
-          f"{sw['bytes_restored']} restored")
+          f"{sw['bytes_restored']} restored "
+          f"({sw['pages_spilled']} page copies across K+V pools — "
+          f"page-granular, never the full pool)")
     print(f"  modeled cycles:   {sw['modeled_cycles']:.0f} "
           f"(paper: ~3.2k/switch for an 8-KiB VRF; ours moves KV pages)")
     print(f"  modeled seconds @50 MHz: "
           f"{cost.seconds(sw['modeled_cycles'])*1e3:.2f} ms")
+    print(f"  satp delta sync:  "
+          f"{st['counters'].get('ptab_rows_uploaded', 0)} page-table rows "
+          f"uploaded over {eng_t.scheduler.step_i} steps "
+          f"(wholesale re-upload would be "
+          f"{eng_t.scheduler.step_i * eng_t.cfg.max_batch})")
 
     identical = all(
         [int(x) for x in done_t[i].output] == [int(x) for x in done_r[i].output]

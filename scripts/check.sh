@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification without the multi-minute sharding subprocesses:
+#   1. byte-compile the whole tree (catches syntax/indent errors fast);
+#   2. import the package surface (catches broken module wiring);
+#   3. run the `fast` pytest subset (everything not marked `slow`).
+# The full gate (including sharding dry-runs) stays:
+#   PYTHONPATH=src python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== byte-compile"
+python -m compileall -q src benchmarks examples tests
+
+echo "== import surface"
+python - <<'PY'
+import repro.core, repro.kernels.ops, repro.models, repro.serve
+import repro.launch.sharding, repro.launch.mesh
+print("imports OK")
+PY
+
+echo "== fast tests"
+python -m pytest -q -m fast "$@"

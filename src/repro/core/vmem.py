@@ -167,6 +167,10 @@ class VirtualMemory:
             (config.max_seqs, config.max_pages_per_seq), INVALID_PAGE, np.int32
         )
         self._lens = np.zeros(config.max_seqs, dtype=np.int32)
+        # rows whose PTEs changed since the last ``drain_dirty_rows`` — the
+        # device-resident copy of the table (serve.Executor) is updated
+        # incrementally from these deltas instead of re-uploaded wholesale.
+        self._dirty_rows: set[int] = set()
 
     # ---- queries ------------------------------------------------------
 
@@ -183,12 +187,28 @@ class VirtualMemory:
     def seq_len(self, seq_id: int) -> int:
         return self._seqs[seq_id].length
 
+    @property
+    def num_free_slots(self) -> int:
+        return len(self._free_slots)
+
     def device_page_table(self) -> jnp.ndarray:
         """The satp analogue: `[max_seqs, max_pages_per_seq] int32`."""
         return jnp.asarray(self._table)
 
     def device_seq_lens(self) -> jnp.ndarray:
         return jnp.asarray(self._lens)
+
+    def drain_dirty_rows(self) -> tuple[np.ndarray, np.ndarray]:
+        """Rows of the page table mutated since the last drain.
+
+        Returns ``(row_indices [D] int32, row_contents [D, max_pages] int32)``
+        and clears the dirty set.  The serving executor applies these as a
+        scatter into its persistent device-side table — the decode hot path
+        never re-uploads the whole satp array.
+        """
+        rows = np.asarray(sorted(self._dirty_rows), np.int32)
+        self._dirty_rows.clear()
+        return rows, self._table[rows].copy()
 
     # ---- mapping ------------------------------------------------------
 
@@ -214,6 +234,7 @@ class VirtualMemory:
         self._seqs[seq_id] = state
         self._table[slot, :n_pages] = pages
         self._lens[slot] = num_tokens
+        self._dirty_rows.add(slot)
         return state
 
     def fork_seq(self, parent_id: int, child_id: int, prefix_tokens: int) -> SeqState:
@@ -241,6 +262,7 @@ class VirtualMemory:
         self._seqs[child_id] = state
         self._table[slot, : len(pages)] = pages
         self._lens[slot] = prefix_tokens
+        self._dirty_rows.add(slot)
         return state
 
     def append_tokens(self, seq_id: int, n: int = 1) -> list[PageFault]:
@@ -264,6 +286,7 @@ class VirtualMemory:
             first_new_page = len(state.pages)
             pages = self.pool.alloc(need)  # may raise; state untouched
             self.pool.fault_count += need
+            self._dirty_rows.add(state.slot)
             for i, p in enumerate(pages):
                 lpn = first_new_page + i
                 self._table[state.slot, lpn] = p
@@ -285,6 +308,7 @@ class VirtualMemory:
         self._table[state.slot, :] = INVALID_PAGE
         self._lens[state.slot] = 0
         self._free_slots.append(state.slot)
+        self._dirty_rows.add(state.slot)
 
     # ---- spill / restore (context switch) --------------------------------
 
@@ -299,6 +323,7 @@ class VirtualMemory:
         self._table[state.slot, :] = INVALID_PAGE
         self._lens[state.slot] = 0
         self._free_slots.append(state.slot)
+        self._dirty_rows.add(state.slot)
         return state
 
     def restore_seq(self, seq_id: int, num_tokens: int) -> SeqState:

@@ -12,6 +12,20 @@ from __future__ import annotations
 import functools
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
+
+#: Pallas-TPU compiler params across JAX versions: ``CompilerParams`` is
+#: the current name, ``TPUCompilerParams`` the 0.4.x one.  Fail loudly at
+#: import time if neither exists — a None here would only surface as an
+#: opaque TypeError deep inside the first pallas_call.
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - future-jax guard
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels.common for this JAX version"
+    )
 
 #: MXU systolic array dimension — matmul block shapes must be multiples.
 MXU_DIM = 128

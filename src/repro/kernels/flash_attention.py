@@ -22,6 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import should_interpret
+from repro.kernels import common
 
 _NEG_INF = -1e30
 
@@ -120,7 +121,7 @@ def flash_attention(
             pltpu.VMEM((bq, 1), jnp.float32),   # running normalizer
             pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=common.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -22,6 +22,7 @@ from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_attn_kernel,
 )
 from repro.kernels.paged_copy import paged_copy as _paged_copy_kernel
+from repro.kernels.paged_copy import paged_copy_at as _paged_copy_at_kernel
 from repro.kernels.paged_gather import paged_gather as _paged_gather_kernel
 from repro.kernels.wkv6 import wkv6 as _wkv6_kernel
 
@@ -142,6 +143,27 @@ def paged_copy(
             src, pool, page_table, lens, page_size=page_size
         )
     return ref.paged_copy_ref(src, pool, page_table, lens, page_size=page_size)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "use_kernel"))
+def paged_copy_at(
+    src: jax.Array,
+    pool: jax.Array,
+    page_table: jax.Array,
+    starts: jax.Array,
+    lens: jax.Array,
+    *,
+    page_size: int,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Burst copy at arbitrary logical start offsets (continuation prefill)."""
+    if use_kernel:
+        return _paged_copy_at_kernel(
+            src, pool, page_table, starts, lens, page_size=page_size
+        )
+    return ref.paged_copy_at_ref(
+        src, pool, page_table, starts, lens, page_size=page_size
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("page_size", "use_kernel"))

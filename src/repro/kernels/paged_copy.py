@@ -91,3 +91,97 @@ def paged_copy(
     )(lens.astype(jnp.int32), page_table.astype(jnp.int32),
       src.astype(pool.dtype), pool)
     return out[:-1]  # drop the trash frame
+
+
+# ---------------------------------------------------------------------------
+# continuation copy: bursts starting at an arbitrary logical offset
+# ---------------------------------------------------------------------------
+
+
+def _paged_copy_at_kernel(
+    starts_ref,       # SMEM [B]   logical start position per sequence
+    lens_ref,         # SMEM [B]   number of valid new tokens per sequence
+    page_table_ref,   # SMEM [B, max_pages]
+    src_ref,          # VMEM [1, page, W]  offset-aligned chunk tokens
+    old_ref,          # VMEM [1, page, W]  existing frame content
+    o_ref,            # VMEM [1, page, W]  the translated frame
+    *,
+    page_size: int,
+):
+    del page_table_ref
+    b, s = pl.program_id(0), pl.program_id(1)
+    off = starts_ref[b] % page_size
+    # token u of this burst sits at shifted chunk index s*page + u; it is a
+    # real chunk token iff it falls inside the [off, off + len) window
+    u = s * page_size + jax.lax.broadcasted_iota(jnp.int32, src_ref.shape, 1)
+    valid = (u >= off) & (u < off + lens_ref[b])
+    o_ref[...] = jnp.where(valid, src_ref[...], old_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def paged_copy_at(
+    src: jax.Array,          # [B, S, W] chunk tokens, logical order
+    pool: jax.Array,         # [P, page, W] physical pool (updated)
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32 — logical position of src[:, 0]
+    lens: jax.Array,         # [B] int32 — tokens of src actually valid
+    *,
+    page_size: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Write ``src[b, :lens[b]]`` at logical positions ``starts[b]...``.
+
+    The continuation-prefill burst engine: chunk token ``t`` of sequence
+    ``b`` lands at logical position ``starts[b] + t``, translated through
+    the page table one burst per touched page (C2-burst, same contract as
+    :func:`paged_copy`).  ``starts`` need not be page-aligned: the source
+    is pre-shifted by ``starts % page`` so every burst stays page-aligned
+    in both source and destination, and the first/last partial pages are
+    handled read-modify-write (precise commit, existing bytes kept).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    b, s, w = src.shape
+    n_frames, page, _ = pool.shape
+    assert page == page_size
+    # +1 burst: an unaligned window [start, start+S) can straddle one extra
+    # page boundary compared to the aligned case.
+    s_pad = cdiv(s, page_size) * page_size
+    n_bursts = s_pad // page_size + 1
+    s2 = n_bursts * page_size
+    starts = starts.astype(jnp.int32)
+    # shift each row right by its page offset: shifted[b, off + t] = src[b, t]
+    off = (starts % page_size)[:, None]                        # [B, 1]
+    idx = (jnp.arange(s2)[None, :] - off) % s2                 # [B, S2]
+    srcp = jnp.pad(src, ((0, 0), (0, s2 - s), (0, 0)))
+    src_shifted = jnp.take_along_axis(srcp, idx[:, :, None], axis=1)
+
+    trash = n_frames
+    pool = jnp.pad(pool, ((0, 1), (0, 0), (0, 0)))
+    max_pages = page_table.shape[1]
+
+    def frame_index(bi, si, starts_ref, lens_ref, page_table_ref):
+        del lens_ref
+        vpn = starts_ref[bi] // page_size + si
+        entry = page_table_ref[bi, jnp.minimum(vpn, max_pages - 1)]
+        bad = (entry < 0) | (vpn >= max_pages)
+        return (jnp.where(bad, trash, entry), 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, n_bursts),
+        in_specs=[
+            pl.BlockSpec((1, page_size, w), lambda bi, si, *_: (bi, si, 0)),
+            pl.BlockSpec((1, page_size, w), frame_index),
+        ],
+        out_specs=pl.BlockSpec((1, page_size, w), frame_index),
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_copy_at_kernel, page_size=page_size),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        grid_spec=grid_spec,
+        input_output_aliases={4: 0},  # pool is updated in place
+        interpret=interpret,
+    )(starts, lens.astype(jnp.int32), page_table.astype(jnp.int32),
+      src_shifted.astype(pool.dtype), pool)
+    return out[:-1]  # drop the trash frame

@@ -188,6 +188,38 @@ def paged_copy_ref(
     return flat[:-1].reshape(p, page, w)
 
 
+def paged_copy_at_ref(
+    src: jax.Array,          # [B, S, W]
+    pool: jax.Array,         # [P, page, W]
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32 — logical position of src[:, 0]
+    lens: jax.Array,         # [B] int32
+    *,
+    page_size: int,
+) -> jax.Array:
+    """Continuation copy: token ``t`` lands at logical ``starts[b] + t``."""
+    b, s, w = src.shape
+    p, page, _ = pool.shape
+    max_pages = page_table.shape[1]
+    tok = jnp.arange(s)[None, :]                              # [1, S]
+    pos = starts[:, None] + tok                               # [B, S]
+    vpn = pos // page_size
+    entry = jnp.take_along_axis(
+        page_table, jnp.minimum(vpn, max_pages - 1), axis=1
+    )
+    valid = (tok < lens[:, None]) & (entry >= 0) & (vpn < max_pages)
+    rows = jnp.maximum(entry, 0) * page_size + pos % page_size
+    trash = p * page                                          # one spare row
+    rows = jnp.where(valid, rows, trash)
+    flat = jnp.concatenate(
+        [pool.reshape(-1, w), jnp.zeros((1, w), pool.dtype)], axis=0
+    )
+    flat = flat.at[rows.reshape(-1)].set(
+        src.reshape(-1, w).astype(pool.dtype)
+    )
+    return flat[:-1].reshape(p, page, w)
+
+
 def paged_gather_ref(
     pool: jax.Array,            # [P, page, W]
     page_table_row: jax.Array,  # [max_pages] int32

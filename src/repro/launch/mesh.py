@@ -10,11 +10,35 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` across JAX versions.
+
+    Newer JAX (>= 0.6) wants explicit ``axis_types``; 0.4.x has neither the
+    kwarg nor ``jax.sharding.AxisType``.  Auto axes are the 0.4.x default,
+    so falling back to the bare call is semantically identical.
+    """
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Context manager setting the ambient mesh across JAX versions.
+
+    ``jax.set_mesh`` (>= 0.6) or the Mesh's own context manager (0.4.x).
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is its own context manager
+
+
 def _mk(shape, axes) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return compat_make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

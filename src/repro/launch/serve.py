@@ -1,9 +1,9 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Spins up the continuous-batching engine (paged virtual memory, preemption,
-fault accounting) on a reduced config and reports the paper-aligned
-statistics: translation bursts, page faults, context-switch bytes/cycles,
-tokens/s.
+Spins up the split serving engine (host Scheduler = policy plane, device
+Executor = data plane; see ``repro/serve/engine.py``) on a reduced config
+and reports the paper-aligned statistics: translation bursts, page faults,
+context-switch bytes/cycles, page-table delta uploads, tokens/s.
 """
 
 import argparse
@@ -28,6 +28,9 @@ def main() -> None:
                     help="small pools force preemption (context switches)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="preload a shared prefix; requests fork from it "
+                         "(continuation prefill through the Executor)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -41,11 +44,18 @@ def main() -> None:
     eng = Engine(model, params, ServeConfig(
         page_size=args.page_size, num_pages=args.num_pages,
         max_pages_per_seq=max(
-            4, (args.prompt_len + args.max_new_tokens) // args.page_size + 2
+            4, (args.prefix_len + args.prompt_len + args.max_new_tokens)
+            // args.page_size + 2
         ),
         max_batch=args.max_batch,
     ))
     rng = np.random.default_rng(args.seed)
+    share = args.prefix_len > 0
+    if share:
+        eng.preload_prefix(
+            rng.integers(0, cfg.vocab_size,
+                         size=args.prefix_len).astype(np.int32)
+        )
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
         shape = (plen, cfg.num_codebooks) if (
@@ -55,6 +65,7 @@ def main() -> None:
             req_id=i,
             prompt=rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32),
             max_new_tokens=args.max_new_tokens,
+            share_prefix=share,
         ))
     t0 = time.perf_counter()
     done = eng.run()
@@ -64,8 +75,13 @@ def main() -> None:
     print(f"completed {len(done)}/{args.requests} requests, "
           f"{total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / dt:.1f} tok/s on CPU interpret)")
-    print("counters:", stats["counters"])
-    print("context switches:", stats["switch_stats"])
+    print("scheduler (policy plane) counters:", stats["counters"])
+    print("executor (data plane): context switches:", stats["switch_stats"])
+    print(f"  page-table delta uploads: "
+          f"{stats['counters'].get('ptab_rows_uploaded', 0)} rows in "
+          f"{stats['counters'].get('ptab_syncs', 0)} syncs over "
+          f"{eng.scheduler.step_i} steps "
+          f"(seed engine: {eng.scheduler.step_i * eng.cfg.max_batch} rows)")
     print("pool:", stats["pool"])
 
 

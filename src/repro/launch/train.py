@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.data import DataConfig, SyntheticLMStream, make_global_batch
-from repro.launch.mesh import dp_axes, make_host_mesh
+from repro.launch.mesh import dp_axes, make_host_mesh, use_mesh
 from repro.launch.sharding import make_shard_hook
 from repro.models import build_model
 from repro.models.config import ShapeConfig
@@ -46,7 +46,7 @@ def main() -> None:
         total_steps=args.steps,
     )
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         model = build_model(cfg, remat=True, shard=make_shard_hook(mesh))
         trainer = Trainer(
             model, opt_cfg,

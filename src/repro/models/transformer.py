@@ -427,6 +427,110 @@ class TransformerLM:
         return logits, new_state
 
     @functools.partial(jax.jit, static_argnums=(0,))
+    def prefill_continue(
+        self,
+        params: Params,
+        tokens: jax.Array,        # [B, S] padded continuation chunks
+        start_lens: jax.Array,    # [B] tokens already cached per sequence
+        chunk_lens: jax.Array,    # [B] true lengths of the new chunks
+        state: PagedKVState,
+    ) -> tuple[jax.Array, PagedKVState]:
+        """Chunked prefill at arbitrary start offsets (continuation).
+
+        Extends sequences that already have ``start_lens`` tokens in the
+        paged cache by a chunk of new tokens: KV is written through the page
+        table with one translation per burst starting at the (not
+        necessarily page-aligned) logical offset (``paged_copy_at``), and
+        each chunk query attends causally over cache + chunk through the
+        page table.  This replaces one-token-at-a-time teacher forcing for
+        forked/continued requests with a single device step per chunk.
+
+        The host must have mapped pages covering positions
+        ``[start, start + chunk)`` (VirtualMemory.append_tokens).
+        Returns (last-chunk-token logits [B, V...], state with
+        seq_lens = start_lens + chunk_lens).
+        """
+        cfg = self.cfg
+        b, s = tokens.shape[:2]
+        page = state.page_size
+        hkv, hd, g = cfg.num_kv_heads, cfg.head_dim, cfg.q_per_kv
+        positions = start_lens[:, None] + jnp.arange(s)[None, :]    # [B, S]
+        x = self.embed(params, tokens)
+        max_pages = state.page_table.shape[1]
+        max_t = max_pages * page
+        frames = jnp.maximum(state.page_table, 0)                   # [B, maxp]
+        kv_scale = (1.0 / self.KV_INT8_SCALE
+                    if self.kv_dtype == "int8" else None)
+        scale = hd ** -0.5
+        k_pos = jnp.arange(max_t)[None, None, :]                    # [1,1,maxT]
+        causal = k_pos <= positions[:, :, None]                     # [B,S,maxT]
+
+        def layer(block_p, x, k_pool, v_pool, is_moe):
+            q, k, v = self._block_serve_qkv(block_p, x, positions)
+            k_pool = ops.paged_copy_at(
+                self._kv_quant(k).reshape(b, s, hkv * hd),
+                k_pool.reshape(-1, page, hkv * hd),
+                state.page_table, start_lens, chunk_lens, page_size=page,
+                use_kernel=self.use_kernels,
+            ).reshape(k_pool.shape)
+            v_pool = ops.paged_copy_at(
+                self._kv_quant(v).reshape(b, s, hkv * hd),
+                v_pool.reshape(-1, page, hkv * hd),
+                state.page_table, start_lens, chunk_lens, page_size=page,
+                use_kernel=self.use_kernels,
+            ).reshape(v_pool.shape)
+            # attend through the page table: gathered logical KV, causal
+            # mask on absolute positions (cache + committed chunk prefix)
+            k_log = k_pool[frames].reshape(b, max_t, hkv, hd)
+            v_log = v_pool[frames].reshape(b, max_t, hkv, hd)
+            if kv_scale is not None:
+                k_log = k_log.astype(jnp.float32) * kv_scale
+                v_log = v_log.astype(jnp.float32) * kv_scale
+            qg = q.reshape(b, s, hkv, g, hd)
+            sc = jnp.einsum(
+                "bshgd,bthd->bshgt", qg.astype(jnp.float32),
+                k_log.astype(jnp.float32),
+            ) * scale
+            sc = jnp.where(causal[:, :, None, None, :], sc, -1e30)
+            p = jax.nn.softmax(sc, axis=-1)
+            p = jnp.where(causal[:, :, None, None, :], p, 0.0)
+            o = jnp.einsum("bshgt,bthd->bshgd", p, v_log.astype(jnp.float32))
+            o = o.astype(x.dtype).reshape(b, s, hkv * g * hd)
+            x = x + o @ block_p["attn"]["wo"]
+            x = self._ffn_serve(block_p, x, is_moe)
+            return x, k_pool, v_pool
+
+        def body(carry, xs):
+            x = carry
+            sb, k_pools_g, v_pools_g = xs
+            kps, vps = [], []
+            for i in range(self.moe_every):
+                x, kp, vp = layer(
+                    sb[f"sub{i}"], x, k_pools_g[i], v_pools_g[i],
+                    self._is_moe_sub(i),
+                )
+                kps.append(kp)
+                vps.append(vp)
+            return x, (jnp.stack(kps), jnp.stack(vps))
+
+        x, (k_pools, v_pools) = jax.lax.scan(
+            body, x,
+            (params["blocks"], self._group_pools(state.k_pools),
+             self._group_pools(state.v_pools)),
+        )
+        k_pools = self._ungroup_pools(k_pools)
+        v_pools = self._ungroup_pools(v_pools)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        last = jnp.take_along_axis(
+            x, jnp.maximum(chunk_lens - 1, 0)[:, None, None], axis=1
+        )[:, 0]
+        logits = self.logits_fn(params, last)
+        new_lens = (start_lens + chunk_lens).astype(jnp.int32)
+        return logits, PagedKVState(
+            k_pools, v_pools, state.page_table, new_lens
+        )
+
+    @functools.partial(jax.jit, static_argnums=(0,))
     def decode_step(
         self,
         params: Params,

@@ -1,4 +1,32 @@
-"""Serving: continuous batching over paged virtual memory (the "OS")."""
-from repro.serve.engine import Engine, Request, ServeConfig
+"""Serving: continuous batching over paged virtual memory (the "OS").
 
-__all__ = ["Engine", "Request", "ServeConfig"]
+Split per the AraOS architecture: :class:`Scheduler` is the host-side
+CVA6/OS plane (policy, no device arrays), :class:`Executor` is the
+device-resident Ara2 data plane (KV pools, persistent page table, jitted
+steps), and :class:`Engine` is the thin facade wiring them together.
+:class:`ReferenceEngine` is the frozen pre-split seed implementation kept
+for equivalence testing and before/after benchmarks.
+"""
+from repro.serve.engine import Engine
+from repro.serve.executor import Executor
+from repro.serve.reference import ReferenceEngine
+from repro.serve.scheduler import (
+    DataPlane,
+    DecodePlan,
+    HostOnlyPlane,
+    Request,
+    Scheduler,
+    ServeConfig,
+)
+
+__all__ = [
+    "DataPlane",
+    "DecodePlan",
+    "Engine",
+    "Executor",
+    "HostOnlyPlane",
+    "ReferenceEngine",
+    "Request",
+    "Scheduler",
+    "ServeConfig",
+]

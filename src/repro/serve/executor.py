@@ -1,0 +1,251 @@
+"""Device-resident serving executor — the Ara2 data plane of the split.
+
+Everything that touches a device array lives here: the paged KV pools, a
+*persistent device page table* (the satp analogue, updated incrementally
+from ``VirtualMemory.drain_dirty_rows()`` deltas — never re-uploaded
+wholesale), and jitted prefill / continuation-prefill / decode steps whose
+KV pools are donated so XLA updates them in place.
+
+Contrast with the seed engine's hot path, which re-uploaded the full page
+table every decode step and stacked+reshaped both full KV pools on every
+spill/restore.  Here:
+
+  * page-table updates are delta-only (``ptab_rows_uploaded`` counter);
+  * spill/restore move only the victim sequence's pages
+    (``ContextSwitcher.spill_kv``/``restore_kv`` — page-granular, the
+    paper's §3.1 context-switch cost in actually-moved bytes);
+  * inactive decode lanes are masked *inside* the jitted step from a [B]
+    bool mask, not by rewriting table rows on the host.
+
+The executor implements the scheduler's :class:`~repro.serve.scheduler.
+DataPlane` protocol; it makes no policy decisions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ContextSwitcher,
+    CostModel,
+    INVALID_PAGE,
+    PerfCounters,
+    VirtualMemory,
+)
+from repro.models.transformer import PagedKVState, TransformerLM
+from repro.serve.scheduler import Request, ServeConfig
+
+
+# ---------------------------------------------------------------------------
+# jitted device steps (module-level so the jit cache is shared per model)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _apply_ptab_delta(ptab: jax.Array, rows: jax.Array,
+                      vals: jax.Array) -> jax.Array:
+    """Scatter dirty rows into the persistent device page table."""
+    return ptab.at[rows].set(vals)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(4, 5))
+def _prefill_step(model: TransformerLM, params: Any, tokens: jax.Array,
+                  lens: jax.Array, k_pools: jax.Array, v_pools: jax.Array,
+                  pt_rows: jax.Array):
+    state = PagedKVState(k_pools, v_pools, pt_rows,
+                         jnp.zeros_like(lens))
+    logits, ns = model.prefill(params, tokens, lens, state)
+    return logits, ns.k_pools, ns.v_pools
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(5, 6))
+def _continue_step(model: TransformerLM, params: Any, tokens: jax.Array,
+                   starts: jax.Array, lens: jax.Array, k_pools: jax.Array,
+                   v_pools: jax.Array, pt_rows: jax.Array):
+    state = PagedKVState(k_pools, v_pools, pt_rows,
+                         jnp.zeros_like(starts))
+    logits, ns = model.prefill_continue(params, tokens, starts, lens, state)
+    return logits, ns.k_pools, ns.v_pools
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(3, 4))
+def _decode_step(model: TransformerLM, params: Any, tokens: jax.Array,
+                 k_pools: jax.Array, v_pools: jax.Array, ptab: jax.Array,
+                 pre_lens: jax.Array, active: jax.Array):
+    # mask page-table rows of slots that are NOT decoding this step:
+    # mapped-but-idle sequences (e.g. the resident shared prefix) must not
+    # receive the inactive-lane scratch writes — with a valid row the guard
+    # would route them into a LIVE frame instead of the reserved scratch
+    # row.  The mask is applied on device from a [B] bool vector; the table
+    # itself is never rewritten.
+    masked = jnp.where(active[:, None], ptab, INVALID_PAGE)
+    state = PagedKVState(k_pools, v_pools, masked, pre_lens)
+    logits, ns = model.decode_step(params, tokens, state)
+    return logits, ns.k_pools, ns.v_pools
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _copy_page(k_pools: jax.Array, v_pools: jax.Array, src: jax.Array,
+               dst: jax.Array):
+    """COW tail-page copy: one frame in each pool, in place."""
+    return (k_pools.at[:, dst].set(k_pools[:, src]),
+            v_pools.at[:, dst].set(v_pools[:, src]))
+
+
+class Executor:
+    """Owns KV pools + the device page table; executes scheduler plans."""
+
+    def __init__(self, model: TransformerLM, params: Any, cfg: ServeConfig,
+                 vmem: VirtualMemory, cost: CostModel | None = None,
+                 counters: PerfCounters | None = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.vmem = vmem
+        self.counters = counters or PerfCounters()
+        self.switcher = ContextSwitcher(vmem, cost, page_axis=1)
+        # the device pool has num_pages frames; the allocator saw one less
+        # (last frame = scratch for masked lanes)
+        self.kv = model.init_kv_state(
+            cfg.max_batch, cfg.num_pages, cfg.page_size, cfg.max_pages_per_seq
+        )
+        #: persistent satp: updated by delta scatter, read by every step
+        self._ptab = jnp.full(
+            (cfg.max_batch, cfg.max_pages_per_seq), INVALID_PAGE, jnp.int32
+        )
+        self._rng = jax.random.PRNGKey(cfg.seed)
+
+    # ------------------------------------------------------------------
+    # persistent device page table
+    # ------------------------------------------------------------------
+
+    def sync_page_table(self) -> None:
+        """Apply host page-table deltas (dirty rows only) to the device."""
+        rows, vals = self.vmem.drain_dirty_rows()
+        if rows.size:
+            self._ptab = _apply_ptab_delta(
+                self._ptab, jnp.asarray(rows), jnp.asarray(vals)
+            )
+            self.counters.inc("ptab_rows_uploaded", int(rows.size))
+            self.counters.inc("ptab_syncs")
+
+    @property
+    def device_page_table(self) -> jax.Array:
+        return self._ptab
+
+    # ------------------------------------------------------------------
+    # compute steps
+    # ------------------------------------------------------------------
+
+    def preload_prefix(self, prefix_tokens: np.ndarray, slot: int,
+                       n: int) -> None:
+        self.sync_page_table()
+        tokens = np.asarray(prefix_tokens, np.int32)[None, :]
+        page = self.cfg.page_size
+        pad = (-n) % page
+        if pad:
+            tokens = np.pad(tokens, ((0, 0), (0, pad)))
+        pt_rows = jnp.take(self._ptab, jnp.asarray([slot]), axis=0)
+        _, k, v = _prefill_step(
+            self.model, self.params, jnp.asarray(tokens),
+            jnp.asarray([n], jnp.int32), self.kv.k_pools, self.kv.v_pools,
+            pt_rows,
+        )
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self.counters.inc("prefix_tokens", n)
+
+    def prefill(self, reqs: list[Request]) -> list[np.ndarray]:
+        """Batched prefill of freshly admitted requests; returns the first
+        sampled token per request (request order)."""
+        self.sync_page_table()
+        page = self.cfg.page_size
+        smax = max(len(r.prompt) for r in reqs)
+        smax = -(-smax // page) * page            # burst-align
+        tok_shape = (len(reqs), smax) + reqs[0].prompt.shape[1:]
+        tokens = np.zeros(tok_shape, np.int32)
+        lens = np.array([len(r.prompt) for r in reqs], np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, : len(r.prompt)] = r.prompt
+        slots = [self.vmem.seq(r.req_id).slot for r in reqs]
+        pt_rows = jnp.take(self._ptab, jnp.asarray(slots), axis=0)
+        with self.counters.timer("prefill"):
+            logits, k, v = _prefill_step(
+                self.model, self.params, jnp.asarray(tokens),
+                jnp.asarray(lens), self.kv.k_pools, self.kv.v_pools, pt_rows,
+            )
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        first = self.sample(logits)
+        return [np.asarray(first[i]) for i in range(len(reqs))]
+
+    def decode(self, tokens: np.ndarray, pre_lens: np.ndarray,
+               active: np.ndarray) -> np.ndarray:
+        """One full-slot decode step; returns sampled tokens by slot."""
+        self.sync_page_table()
+        with self.counters.timer("decode"):
+            logits, k, v = _decode_step(
+                self.model, self.params, jnp.asarray(tokens),
+                self.kv.k_pools, self.kv.v_pools, self._ptab,
+                jnp.asarray(pre_lens), jnp.asarray(active),
+            )
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        return self.sample(logits)
+
+    # ------------------------------------------------------------------
+    # DataPlane protocol (driven by the Scheduler)
+    # ------------------------------------------------------------------
+
+    def admit_forked(self, req: Request, start_len: int,
+                     tail_copy: tuple[int, int] | None) -> np.ndarray:
+        """COW tail copy + one continuation prefill for the whole prompt
+        chunk — replaces the seed's one-token-at-a-time teacher forcing."""
+        self.sync_page_table()
+        if tail_copy is not None:
+            src, dst = tail_copy
+            k, v = _copy_page(
+                self.kv.k_pools, self.kv.v_pools,
+                jnp.asarray(src), jnp.asarray(dst),
+            )
+            self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        slot = self.vmem.seq(req.req_id).slot
+        chunk = np.asarray(req.prompt, np.int32)[None, :]
+        pt_rows = jnp.take(self._ptab, jnp.asarray([slot]), axis=0)
+        with self.counters.timer("prefill"):
+            logits, k, v = _continue_step(
+                self.model, self.params, jnp.asarray(chunk),
+                jnp.asarray([start_len], jnp.int32),
+                jnp.asarray([len(req.prompt)], jnp.int32),
+                self.kv.k_pools, self.kv.v_pools, pt_rows,
+            )
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self.counters.inc("continuation_prefill_tokens", len(req.prompt))
+        return np.asarray(self.sample(logits)[0])
+
+    def spill(self, req: Request) -> None:
+        """Page-granular spill: only the victim's frames leave the device."""
+        self.switcher.spill_kv(req.req_id, self.kv.k_pools, self.kv.v_pools)
+
+    def restore(self, req: Request, num_tokens: int) -> None:
+        """Page-granular restore into freshly allocated frames."""
+        k, v, _ = self.switcher.restore_kv(
+            req.req_id, self.kv.k_pools, self.kv.v_pools
+        )
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+
+    def sample(self, logits: jax.Array) -> np.ndarray:
+        if self.cfg.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self._rng, key = jax.random.split(self._rng)
+        return np.asarray(
+            jax.random.categorical(
+                key, logits / self.cfg.temperature, axis=-1
+            )
+        )

@@ -1,0 +1,379 @@
+"""Host-side serving policy — the CVA6/OS plane of the serving split.
+
+AraOS keeps the scalar core (CVA6) in charge of translation and OS policy
+while the Ara2 vector datapath streams bursts; the vector unit only hits
+peak when the scalar side stays off its critical path.  The serving engine
+mirrors that split: this module is the *scalar/OS plane* — admission
+control, victim selection, fork bookkeeping, page-table policy — and it
+owns **no device arrays**.  All state here is Python/NumPy, so the
+scheduler is unit-testable without a device (see
+``tests/test_serve_scheduler.py``, which drives it with a fake data plane).
+
+Data movement (KV page copies, prefill/decode dispatch) is delegated to a
+:class:`DataPlane` — in production the device-resident
+:class:`repro.serve.executor.Executor`; in tests the :class:`HostOnlyPlane`
+stub below.  The scheduler decides *what* moves; the plane decides *how*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Protocol
+
+import numpy as np
+
+from repro.core import CostModel, OutOfPagesError, PerfCounters, VirtualMemory
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray              # [len] int32 (or [len, K] audio)
+    max_new_tokens: int
+    output: list[Any] = dataclasses.field(default_factory=list)
+    status: str = "queued"          # queued|running|swapped|done
+    arrival: int = 0                # engine step of submission
+    share_prefix: bool = False      # fork from the engine's resident prefix
+
+    prefix_len: int = 0             # set by the scheduler on forked admission
+
+    @property
+    def total_len(self) -> int:
+        return self.prefix_len + len(self.prompt) + len(self.output)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.output)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    page_size: int = 16
+    num_pages: int = 256            # physical frames (1 reserved as scratch)
+    max_pages_per_seq: int = 32
+    max_batch: int = 8
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+    tick_every_steps: int = 50      # scheduler tick accounting cadence
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    """Full-slot decode batch: host arrays only, indexed by device slot."""
+
+    tokens: np.ndarray              # [B, ...] last sampled token per slot
+    pre_lens: np.ndarray            # [B] position of the new token
+    active: np.ndarray              # [B] bool — slots decoding this step
+
+
+class DataPlane(Protocol):
+    """The narrow device interface the scheduler drives.
+
+    Implementations: :class:`repro.serve.executor.Executor` (real device
+    state) and :class:`HostOnlyPlane` (tests).  Every method is invoked at
+    the exact point in the scheduling loop where the seed engine performed
+    the equivalent device work, so policy decisions (which frames are free,
+    who gets preempted) see identical allocator state.
+    """
+
+    def spill(self, req: Request) -> None:
+        """Copy the victim's pages out, then free its mapping
+        (``vmem.spill_seq``)."""
+        ...
+
+    def restore(self, req: Request, num_tokens: int) -> None:
+        """Re-map the sequence (``vmem.restore_seq``) and copy its pages
+        back in."""
+        ...
+
+    def admit_forked(self, req: Request, start_len: int,
+                     tail_copy: tuple[int, int] | None) -> Any:
+        """COW tail-page copy + continuation prefill of ``req.prompt`` at
+        offset ``start_len``; returns the first sampled token."""
+        ...
+
+
+class HostOnlyPlane:
+    """Data-plane stub: page-table bookkeeping only, no arrays.
+
+    Lets scheduler unit tests exercise admission order, victim policy and
+    fork accounting on a bare :class:`VirtualMemory`.  Records every call
+    in ``events`` for assertions.
+    """
+
+    def __init__(self, vmem: VirtualMemory):
+        self.vmem = vmem
+        self.events: list[tuple] = []
+
+    def spill(self, req: Request) -> None:
+        self.events.append(("spill", req.req_id))
+        self.vmem.spill_seq(req.req_id)
+
+    def restore(self, req: Request, num_tokens: int) -> None:
+        self.events.append(("restore", req.req_id))
+        self.vmem.restore_seq(req.req_id, num_tokens)
+
+    def admit_forked(self, req: Request, start_len: int,
+                     tail_copy: tuple[int, int] | None) -> Any:
+        self.events.append(("admit_forked", req.req_id, start_len, tail_copy))
+        return np.int32(0)
+
+
+class Scheduler:
+    """Continuous-batching policy: queues, admission, preemption, forks.
+
+    Mirrors the seed engine's policy decisions exactly (same admission
+    order, same victim key ``(remaining, -arrival)``, same FIFO restore)
+    so the refactored engine is token-for-token equivalent; only the data
+    plane changed.
+    """
+
+    def __init__(self, cfg: ServeConfig, vmem: VirtualMemory,
+                 cost: CostModel | None = None,
+                 counters: PerfCounters | None = None):
+        self.cfg = cfg
+        self.vmem = vmem
+        self.cost = cost or CostModel()
+        self.counters = counters or PerfCounters()
+        self.queue: deque[Request] = deque()
+        self.swapped: deque[int] = deque()
+        self.running: dict[int, Request] = {}    # req_id -> Request
+        self.done: dict[int, Request] = {}
+        self.slot_of: dict[int, int] = {}        # req_id -> device slot
+        self._swap_requests: dict[int, Request] = {}
+        self._spilled_tokens: dict[int, int] = {}  # req_id -> len at spill
+        self.step_i = 0
+        #: shared-prefix ("system prompt") support: one resident sequence
+        #: whose whole pages are refcount-shared into forked requests.
+        self.PREFIX_ID = -1
+        self.prefix_len = 0
+        self.plane: DataPlane | None = None
+
+    def attach_plane(self, plane: DataPlane) -> None:
+        self.plane = plane
+
+    # ------------------------------------------------------------------
+    # queue API
+    # ------------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.running or self.swapped)
+
+    def submit(self, req: Request) -> None:
+        req.arrival = self.step_i
+        self.queue.append(req)
+        self.counters.inc("submitted")
+        self.counters.snapshot("submit", req.req_id)
+
+    def begin_step(self) -> None:
+        self.step_i += 1
+        if self.step_i % self.cfg.tick_every_steps == 0:
+            # 100 Hz scheduler tick accounting (paper §3.1)
+            self.counters.inc("ticks")
+            self.counters.inc(
+                "modeled_tick_cycles", self.cost.sched_tick_cycles
+            )
+
+    # ------------------------------------------------------------------
+    # restore (swap-in)
+    # ------------------------------------------------------------------
+
+    def can_restore(self, req_id: int) -> bool:
+        if req_id not in self._spilled_tokens:
+            return False
+        need = self.vmem.config.pages_for(self._spilled_tokens[req_id])
+        return (self.vmem.pool.num_free >= need
+                and self.vmem.num_free_slots > 0)
+
+    def try_restore(self) -> list[Request]:
+        restored: list[Request] = []
+        for _ in range(len(self.swapped)):
+            req_id = self.swapped[0]
+            if len(self.running) >= self.cfg.max_batch:
+                break
+            if not self.can_restore(req_id):
+                break
+            self.swapped.popleft()
+            req = self._swap_requests.pop(req_id)
+            self.plane.restore(req, self._spilled_tokens.pop(req_id))
+            req.status = "running"
+            self.running[req_id] = req
+            self.slot_of[req_id] = self.vmem.seq(req_id).slot
+            self.counters.inc("restores")
+            self.counters.snapshot("restore", req_id)
+            restored.append(req)
+        return restored
+
+    # ------------------------------------------------------------------
+    # preemption (context-switch policy)
+    # ------------------------------------------------------------------
+
+    def select_victim(self, protect: int | None = None) -> Request | None:
+        """Policy: most remaining work (cheapest to delay), oldest last."""
+        victims = [r for rid, r in self.running.items() if rid != protect]
+        if not victims:
+            return None
+        return max(victims, key=lambda r: (r.remaining, -r.arrival))
+
+    def preempt_for(self, pages_needed: int,
+                    protect: int | None = None) -> bool:
+        """Spill victims until ``pages_needed`` frames are free."""
+        while self.vmem.pool.num_free < pages_needed:
+            victim = self.select_victim(protect)
+            if victim is None:
+                return False
+            self.spill(victim)
+        return True
+
+    def spill(self, victim: Request) -> None:
+        self._spilled_tokens[victim.req_id] = self.vmem.seq_len(victim.req_id)
+        self.plane.spill(victim)       # copies pages out + frees the mapping
+        victim.status = "swapped"
+        self.swapped.append(victim.req_id)
+        self._swap_requests[victim.req_id] = victim
+        del self.running[victim.req_id]
+        del self.slot_of[victim.req_id]
+        self.counters.inc("preemptions")
+        self.counters.snapshot("preempt", victim.req_id)
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def required_pages(self, req: Request) -> int:
+        return self.vmem.config.pages_for(len(req.prompt) + 1)
+
+    def admit(self) -> list[Request]:
+        """Pop queue-front requests that fit; returns the plain-prefill
+        batch.  Forked requests are admitted inline (continuation prefill
+        through the data plane) so allocator state evolves in the same
+        order as the seed engine."""
+        admitted: list[Request] = []
+        while self.queue and (
+            len(self.running) + len(admitted) < self.cfg.max_batch
+        ):
+            req = self.queue[0]
+            need = self.required_pages(req)
+            if need > self.vmem.pool.num_free:
+                if not self.preempt_for(need):
+                    break                      # nothing left to preempt
+            if req.share_prefix:
+                if not self._admit_forked(req):
+                    break
+                self.queue.popleft()
+                continue
+            try:
+                self.vmem.map_seq(req.req_id, len(req.prompt))
+            except OutOfPagesError:
+                break
+            self.queue.popleft()
+            admitted.append(req)
+        return admitted
+
+    def _admit_forked(self, req: Request) -> bool:
+        """Fork the resident prefix; prompt chunk runs as one continuation
+        prefill through the data plane (no per-token host loop)."""
+        page = self.cfg.page_size
+        try:
+            state = self.vmem.fork_seq(self.PREFIX_ID, req.req_id,
+                                       self.prefix_len)
+        except OutOfPagesError:
+            return False
+        tail_copy: tuple[int, int] | None = None
+        if self.prefix_len % page:
+            # partial tail page is copied; whole pages are shared read-only
+            tail_idx = self.prefix_len // page
+            parent = self.vmem.seq(self.PREFIX_ID)
+            tail_copy = (parent.pages[tail_idx], state.pages[tail_idx])
+        try:
+            self.vmem.append_tokens(req.req_id, len(req.prompt))
+        except OutOfPagesError:
+            self.vmem.unmap_seq(req.req_id)    # roll the fork back cleanly
+            return False
+        first = self.plane.admit_forked(req, self.prefix_len, tail_copy)
+        req.status = "running"
+        req.prefix_len = self.prefix_len
+        req.output.append(first)
+        self.running[req.req_id] = req
+        self.slot_of[req.req_id] = state.slot
+        self.counters.inc("forked_admissions")
+        return True
+
+    def finish_prefill(self, reqs: list[Request], first_tokens: Any) -> None:
+        """Commit a plain-prefill batch: mark running, record accounting."""
+        for i, r in enumerate(reqs):
+            r.status = "running"
+            r.output.append(np.asarray(first_tokens[i]))
+            self.running[r.req_id] = r
+            self.slot_of[r.req_id] = self.vmem.seq(r.req_id).slot
+        lens = [len(r.prompt) for r in reqs]
+        self.counters.inc("prefill_tokens", int(sum(lens)))
+        self.counters.inc("prefill_translation_bursts", int(
+            sum(self.vmem.config.pages_for(int(x)) for x in lens)
+        ))
+        self.counters.snapshot("prefill", [r.req_id for r in reqs])
+
+    # ------------------------------------------------------------------
+    # decode planning
+    # ------------------------------------------------------------------
+
+    def grow_running(self) -> None:
+        """Fault in pages for every running sequence's next position,
+        preempting victims when the pool is exhausted (idempotent: a
+        restore may already cover the position)."""
+        for req_id in list(self.running):
+            r = self.running.get(req_id)
+            if r is None:
+                continue  # spilled by an earlier victim selection this step
+            grow = r.total_len - self.vmem.seq_len(req_id)
+            if grow <= 0:
+                continue
+            try:
+                faults = self.vmem.append_tokens(req_id, grow)
+            except OutOfPagesError:
+                if not self.preempt_for(1, protect=req_id):
+                    continue  # stays running; retried next step
+                faults = self.vmem.append_tokens(req_id, grow)
+            if faults:
+                self.counters.inc("page_faults", len(faults))
+                self.counters.inc(
+                    "modeled_fault_cycles",
+                    len(faults) * (self.cost.ptw_cycles
+                                   + self.cost.post_fault_flush_cycles),
+                )
+
+    def decode_plan(self) -> DecodePlan | None:
+        if not self.running:
+            return None  # everything got preempted this step
+        b = self.cfg.max_batch
+        sample = next(iter(self.running.values())).output[-1]
+        tokens = np.zeros((b,) + np.shape(sample), np.int32)
+        pre_lens = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for req_id, r in self.running.items():
+            slot = self.slot_of[req_id]
+            tokens[slot] = r.output[-1]
+            pre_lens[slot] = r.total_len - 1   # position of the new token
+            active[slot] = True
+        return DecodePlan(tokens=tokens, pre_lens=pre_lens, active=active)
+
+    def commit_decode(self, sampled: np.ndarray) -> None:
+        """Append sampled tokens (indexed by slot), retire finished
+        requests."""
+        self.counters.inc("decode_tokens", len(self.running))
+        self.counters.inc("decode_translations", len(self.running))
+        for req_id in list(self.running):
+            r = self.running[req_id]
+            slot = self.slot_of[req_id]
+            r.output.append(np.asarray(sampled[slot]))
+            if len(r.output) >= r.max_new_tokens:
+                r.status = "done"
+                self.done[req_id] = r
+                del self.running[req_id]
+                del self.slot_of[req_id]
+                self.vmem.unmap_seq(req_id)
+                self.counters.inc("completed")
+                self.counters.snapshot("done", req_id)

@@ -1,0 +1,89 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The real library is preferred (see ``requirements-dev.txt``); this shim
+implements just the subset the test suite uses — ``given``, ``settings``,
+and the ``integers`` / ``floats`` / ``lists`` / ``booleans`` strategies —
+by drawing ``max_examples`` pseudo-random examples from a fixed seed.  No
+shrinking, no database; failures reproduce exactly because the seed is
+fixed.  Usage in test modules::
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+    except ImportError:                       # pragma: no cover
+        from _prop_fallback import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+class st:  # noqa: N801 — mimics `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(p._draw(rng) for p in parts))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Records the example budget on the (already ``given``-wrapped) test."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy, **kw_strategies: _Strategy):
+    """Runs the test once per drawn example (seeded, deterministic)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0xA7A05)
+            n = getattr(wrapper, "_max_examples", 20)
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in strategies]
+                drawn_kw = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **drawn_kw, **kwargs)
+        # pytest must not treat the drawn parameters as fixtures: hide the
+        # original signature (drop the trailing drawn args) and the
+        # __wrapped__ attribute pytest would unwrap to.
+        del wrapper.__wrapped__
+        params = list(inspect.signature(fn).parameters.values())
+        if strategies:
+            params = params[: len(params) - len(strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

@@ -1,0 +1,14 @@
+"""Shared pytest config: the `fast` marker.
+
+Every test not explicitly marked ``slow`` is auto-marked ``fast``, so
+``pytest -m fast`` runs the no-subprocess tier-1 subset without paying the
+multi-minute sharding dry-run subprocesses (see scripts/check.sh).
+"""
+
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if "slow" not in item.keywords:
+            item.add_marker(pytest.mark.fast)

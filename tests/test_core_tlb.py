@@ -3,8 +3,11 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
+    from _prop_fallback import given, settings, st
 
 from repro.core import (
     SCALAR,

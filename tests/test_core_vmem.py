@@ -2,8 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
+    from _prop_fallback import given, settings, st
 
 from repro.core import (
     INVALID_PAGE,

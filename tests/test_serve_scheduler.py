@@ -1,0 +1,223 @@
+"""Scheduler-only unit tests: pure host policy, no device, no model.
+
+The Scheduler (the CVA6/OS plane of the serving split) is driven with a
+:class:`HostOnlyPlane` — a data-plane stub that only mirrors page-table
+bookkeeping — so admission order, victim policy, preemption/restore
+bookkeeping and fork accounting are tested without touching a single
+device array."""
+
+import numpy as np
+import pytest
+
+from repro.core import VirtualMemory, VMemConfig
+from repro.serve import HostOnlyPlane, Request, Scheduler, ServeConfig
+
+
+def mk_sched(page_size=4, usable_pages=15, max_pages=8, max_batch=3):
+    cfg = ServeConfig(page_size=page_size, num_pages=usable_pages + 1,
+                      max_pages_per_seq=max_pages, max_batch=max_batch)
+    vmem = VirtualMemory(VMemConfig(
+        page_size=page_size, num_pages=usable_pages,
+        max_pages_per_seq=max_pages, max_seqs=max_batch,
+    ))
+    sched = Scheduler(cfg, vmem)
+    plane = HostOnlyPlane(vmem)
+    sched.attach_plane(plane)
+    return sched, plane
+
+
+def req(i, plen=6, max_new=8, **kw):
+    return Request(req_id=i, prompt=np.arange(plen, dtype=np.int32),
+                   max_new_tokens=max_new, **kw)
+
+
+class TestAdmission:
+    def test_fifo_order_and_batch_cap(self):
+        sched, _ = mk_sched()
+        for i in range(5):
+            sched.submit(req(i))
+        admitted = sched.admit()
+        assert [r.req_id for r in admitted] == [0, 1, 2]   # FIFO, max_batch
+        sched.finish_prefill(admitted, [np.int32(7)] * 3)
+        assert set(sched.running) == {0, 1, 2}
+        assert all(len(r.output) == 1 for r in admitted)
+        assert sched.admit() == []                          # batch is full
+        assert [r.req_id for r in sched.queue] == [3, 4]
+        sched.vmem.check_invariants()
+
+    def test_admission_blocked_by_pool(self):
+        # 4 usable frames, page 4: a 6-token prompt needs 2 frames
+        sched, _ = mk_sched(usable_pages=4)
+        for i in range(3):
+            sched.submit(req(i, plen=6))
+        admitted = sched.admit()
+        # two requests fit (2+2 frames); the third must wait
+        assert [r.req_id for r in admitted] == [0, 1]
+        assert sched.vmem.pool.num_free == 0
+
+    def test_slots_follow_vmem_mapping(self):
+        sched, _ = mk_sched()
+        sched.submit(req(9))
+        admitted = sched.admit()
+        sched.finish_prefill(admitted, [np.int32(0)])
+        assert sched.slot_of[9] == sched.vmem.seq(9).slot
+
+
+class TestVictimPolicy:
+    def _running(self, sched, triples):
+        """(req_id, remaining_work, arrival) -> running request."""
+        for rid, remaining, arrival in triples:
+            r = req(rid, plen=4, max_new=remaining)
+            r.arrival = arrival
+            r.status = "running"
+            sched.vmem.map_seq(rid, 4)
+            sched.running[rid] = r
+            sched.slot_of[rid] = sched.vmem.seq(rid).slot
+
+    def test_most_remaining_work_wins(self):
+        sched, _ = mk_sched()
+        self._running(sched, [(0, 2, 0), (1, 9, 0), (2, 5, 0)])
+        assert sched.select_victim().req_id == 1
+
+    def test_tie_broken_by_earliest_arrival(self):
+        sched, _ = mk_sched()
+        self._running(sched, [(0, 5, 3), (1, 5, 1), (2, 5, 2)])
+        assert sched.select_victim().req_id == 1
+
+    def test_protect_excludes_faulting_request(self):
+        sched, _ = mk_sched()
+        self._running(sched, [(0, 9, 0), (1, 2, 0)])
+        assert sched.select_victim(protect=0).req_id == 1
+
+    def test_no_victim_when_all_protected(self):
+        sched, _ = mk_sched()
+        self._running(sched, [(0, 9, 0)])
+        assert sched.select_victim(protect=0) is None
+
+
+class TestPreemptRestore:
+    def test_spill_restore_roundtrip_fifo(self):
+        sched, plane = mk_sched(usable_pages=4, max_batch=2)
+        for i in range(2):
+            sched.submit(req(i, plen=6, max_new=4))
+        admitted = sched.admit()
+        sched.finish_prefill(admitted, [np.int32(0)] * 2)
+        # force both out (full-remaining tie: insertion order wins)
+        assert sched.preempt_for(4)
+        assert list(sched.swapped) == [0, 1]
+        assert plane.events[0][0] == "spill"
+        assert sched.running == {} and sched.vmem.num_seqs == 0
+        # swap back in, FIFO
+        restored = sched.try_restore()
+        assert [r.req_id for r in restored] == [0, 1]
+        assert ("restore", 1) in plane.events
+        assert set(sched.running) == {0, 1}
+        assert all(r.status == "running" for r in restored)
+        sched.vmem.check_invariants()
+
+    def test_restore_waits_for_free_frames(self):
+        sched, _ = mk_sched(usable_pages=4, max_batch=2)
+        for i in range(2):
+            sched.submit(req(i, plen=6, max_new=4))
+        sched.finish_prefill(sched.admit(), [np.int32(0)] * 2)
+        sched.spill(sched.running[0])
+        # refill the freed frames: victim 0 cannot come back yet
+        sched.vmem.map_seq(9, 6)
+        assert not sched.try_restore()
+        sched.vmem.unmap_seq(9)
+        assert [r.req_id for r in sched.try_restore()] == [0]
+
+    def test_preempt_for_gives_up_without_candidates(self):
+        sched, _ = mk_sched(usable_pages=4)
+        # more frames demanded than exist, nothing running to evict
+        assert not sched.preempt_for(5)
+        # already-satisfiable demand needs no victim at all
+        assert sched.preempt_for(3)
+
+
+class TestForkAccounting:
+    def _with_prefix(self, plen=6, **kw):
+        sched, plane = mk_sched(**kw)
+        sched.vmem.map_seq(sched.PREFIX_ID, plen)
+        sched.prefix_len = plen
+        return sched, plane
+
+    def test_forked_admission_shares_whole_pages(self):
+        sched, plane = self._with_prefix(plen=6)   # pages [2]: 1 whole+tail
+        sched.submit(req(5, plen=3, share_prefix=True))
+        assert sched.admit() == []                 # forked handled inline
+        assert 5 in sched.running
+        assert sched.counters.get("forked_admissions") == 1
+        parent = sched.vmem.seq(sched.PREFIX_ID)
+        child = sched.vmem.seq(5)
+        # whole page 0 shared by refcount; tail page copied
+        assert child.pages[0] == parent.pages[0]
+        assert sched.vmem.pool.refcount(parent.pages[0]) == 2
+        assert child.pages[1] != parent.pages[1]
+        # data plane told to COW-copy exactly the parent tail page
+        ev = [e for e in plane.events if e[0] == "admit_forked"][0]
+        assert ev[2] == 6 and ev[3] == (parent.pages[1], child.pages[1])
+        # chunk appended: child covers prefix + prompt
+        assert sched.vmem.seq_len(5) == 6 + 3
+        assert sched.running[5].prefix_len == 6
+        assert len(sched.running[5].output) == 1   # first sampled token
+        sched.vmem.check_invariants()
+
+    def test_page_aligned_prefix_needs_no_tail_copy(self):
+        sched, plane = self._with_prefix(plen=8)   # 8 % 4 == 0
+        sched.submit(req(5, plen=2, share_prefix=True))
+        sched.admit()
+        ev = [e for e in plane.events if e[0] == "admit_forked"][0]
+        assert ev[3] is None
+        parent = sched.vmem.seq(sched.PREFIX_ID)
+        for p in parent.pages:
+            assert sched.vmem.pool.refcount(p) == 2
+
+    def test_fork_rolls_back_cleanly_on_oom(self):
+        # prefix holds 2 of 4 frames; a 9-token chunk needs 3 more -> OOM
+        sched, _ = self._with_prefix(plen=6, usable_pages=4, max_pages=8)
+        sched.submit(req(5, plen=9, share_prefix=True))
+        assert sched.admit() == []
+        assert 5 not in sched.running
+        assert sched.vmem.num_seqs == 1            # only the prefix remains
+        assert sched.vmem.pool.refcount(
+            sched.vmem.seq(sched.PREFIX_ID).pages[0]) == 1
+        sched.vmem.check_invariants()
+
+
+class TestGrowAndCommit:
+    def test_grow_counts_page_faults(self):
+        sched, _ = mk_sched(page_size=4)
+        sched.submit(req(0, plen=4, max_new=8))
+        sched.finish_prefill(sched.admit(), [np.int32(0)])
+        # position 4 needs a fresh page -> one fault
+        sched.grow_running()
+        assert sched.counters.get("page_faults") == 1
+        assert sched.counters.get("modeled_fault_cycles") > 0
+        plan = sched.decode_plan()
+        assert plan.active.sum() == 1
+        assert plan.pre_lens[sched.slot_of[0]] == 4
+
+    def test_commit_retires_finished_requests(self):
+        sched, _ = mk_sched()
+        sched.submit(req(0, plen=4, max_new=2))
+        sched.finish_prefill(sched.admit(), [np.int32(0)])
+        sched.grow_running()
+        sampled = np.zeros((sched.cfg.max_batch,), np.int32)
+        sched.commit_decode(sampled)
+        assert 0 in sched.done and not sched.running
+        assert sched.vmem.num_seqs == 0
+        assert sched.counters.get("completed") == 1
+
+    def test_decode_plan_none_when_idle(self):
+        sched, _ = mk_sched()
+        assert sched.decode_plan() is None
+
+
+def test_scheduler_imports_no_jax_arrays():
+    """The policy plane must stay host-only: no jnp/jax usage in module."""
+    import inspect
+
+    import repro.serve.scheduler as S
+    src = inspect.getsource(S)
+    assert "import jax" not in src and "jnp." not in src

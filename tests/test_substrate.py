@@ -8,8 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
+    from _prop_fallback import given, settings, st
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config

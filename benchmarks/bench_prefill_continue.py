@@ -1,0 +1,120 @@
+"""Continuation-prefill before/after: gathered pages vs streamed pages.
+
+``prefill_continue`` used to attend through a *gathered-pages* jnp path
+that materializes the whole logical KV prefix (``max_pages x page_size``
+tokens, per layer, per chunk) — the software equivalent of taking a TLB
+miss on every page of the table whether or not it is live.  The Pallas
+kernel (``kernels/paged_prefill_attention.py``) instead streams exactly
+the pages each query block can see, translated through the scalar-
+prefetched page table one burst at a time.
+
+Reported per (start offset, chunk) point:
+
+  * ``us_per_call`` — attention-step latency of each path.  On CPU the
+    kernel runs in interpret mode (Python per grid step), so absolute
+    kernel numbers are meaningless off-TPU; the BYTES column is the
+    hardware-independent signal (paper C2: translations and bytes moved
+    are what the TLB/MMU sees).
+  * bytes gathered — ref: ``2 * B * maxT * Hkv * D * itemsize`` per call
+    (K+V, the whole table reach); kernel: the analytical page count from
+    ``pages_touched`` (exact: pages above the block diagonal are skipped
+    by ``pl.when``) times the page burst size.
+
+``run()`` returns ``(csv_lines, metrics)``; ``benchmarks/run.py --only
+prefill`` exits nonzero unless the kernel path touches strictly fewer
+bytes than the gather path (acceptance gate).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time_call(fn, iters=3):
+    fn()                                   # warm (compile / first trace)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(hkv: int = 2, g: int = 2, d: int = 32, page: int = 16,
+        max_pages: int = 16) -> tuple[list[str], dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.paged_prefill_attention import pages_touched
+
+    key = jax.random.PRNGKey(0)
+    n_frames = 2 * max_pages + 1
+    max_t = max_pages * page
+    itemsize = 4                           # fp32 pools
+    k_pool = jax.random.normal(key, (n_frames, page, hkv, d))
+    v_pool = jax.random.normal(jax.random.fold_in(key, 1), k_pool.shape)
+
+    csv: list[str] = []
+    total_ref_bytes = 0
+    total_kernel_bytes = 0
+    # (start, chunk): short continuation deep in the cache (the fork-admission
+    # shape), chunk spanning a page boundary, and a near-empty cache
+    cases = [(100, 32), (37, 16), (5, 8)]
+    bq = 32
+    for start, chunk in cases:
+        b = 2
+        starts = np.full((b,), start, np.int32)
+        total = start + chunk
+        need = -(-total // page)
+        rng = np.random.default_rng(start)
+        table = np.full((b, max_pages), -1, np.int32)
+        for row in range(b):
+            table[row, :need] = rng.permutation(n_frames)[:need]
+        q = jax.random.normal(
+            jax.random.fold_in(key, start), (b, chunk, hkv, g, d))
+        tab = jnp.asarray(table)
+        sts = jnp.asarray(starts)
+
+        def gather():
+            ops.paged_prefill_attention(
+                q, k_pool, v_pool, tab, sts, page_size=page,
+                use_kernel=False).block_until_ready()
+
+        def kernel():
+            ops.paged_prefill_attention(
+                q, k_pool, v_pool, tab, sts, page_size=page,
+                use_kernel=True, bq=bq).block_until_ready()
+
+        us_ref = _time_call(gather)
+        us_ker = _time_call(kernel)
+        ref_bytes = 2 * b * max_t * hkv * d * itemsize
+        ker_pages = b * pages_touched(start, chunk, max_pages,
+                                      page_size=page, bq=bq)
+        ker_bytes = 2 * ker_pages * page * hkv * d * itemsize
+        total_ref_bytes += ref_bytes
+        total_kernel_bytes += ker_bytes
+        tag = f"s{start}_c{chunk}"
+        print(f"start={start:4d} chunk={chunk:3d}: "
+              f"gather {us_ref:9.1f} us / {ref_bytes:9d} B   "
+              f"kernel {us_ker:9.1f} us / {ker_bytes:9d} B   "
+              f"(bytes x{ref_bytes / ker_bytes:.2f} less)")
+        csv.append(f"prefill_continue_gather_{tag},{us_ref:.1f},"
+                   f"bytes={ref_bytes}")
+        csv.append(f"prefill_continue_kernel_{tag},{us_ker:.1f},"
+                   f"bytes={ker_bytes}")
+
+    ratio = total_ref_bytes / total_kernel_bytes
+    print(f"total bytes gathered: ref {total_ref_bytes} vs kernel "
+          f"{total_kernel_bytes} ({ratio:.2f}x reduction)")
+    csv.append(f"prefill_continue_bytes_reduction,0,{ratio:.3f}x")
+    metrics = dict(ref_bytes=total_ref_bytes, kernel_bytes=total_kernel_bytes)
+    return csv, metrics
+
+
+def main() -> list[str]:
+    return run()[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,24 @@
 """Benchmark harness: one section per paper table/figure + the roofline.
 
 Prints a ``name,us_per_call,derived`` CSV block at the end (harness
-contract).  Sections:
-  fig2   — matmul VM overhead vs DTLB size x problem size  (bench_tlb_sweep)
-  table1 — RiVEC suite scalar vs vector speedups           (bench_rivec)
-  s31    — scheduler ticks + context switches              (bench_context_switch)
-  c2     — burst vs element translation (+ coalescing)     (bench_translation)
-  roof   — dry-run roofline table                          (roofline)
+contract).  Sections (select a subset with ``--only``):
+  fig2     — matmul VM overhead vs DTLB size x problem size (bench_tlb_sweep)
+  table1   — RiVEC suite scalar vs vector speedups           (bench_rivec)
+  s31      — scheduler ticks + context switches              (bench_context_switch)
+  serve    — seed vs Scheduler/Executor serving split        (bench_serve_throughput)
+  c2       — burst vs element translation (+ coalescing)     (bench_translation)
+  prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
+  pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
+  roof     — dry-run roofline table                          (roofline)
+
+``--only prefill`` additionally acts as a CI gate: it exits nonzero if the
+chunked-prefill kernel path gathers at least as many bytes as the
+gathered-pages reference path.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
@@ -19,38 +27,88 @@ def section(title: str):
     print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
 
 
-def main() -> None:
+def _fig2():
+    from benchmarks import bench_tlb_sweep
+    return bench_tlb_sweep.main()
+
+
+def _table1():
+    from benchmarks import bench_rivec
+    return bench_rivec.main()
+
+
+def _s31():
+    from benchmarks import bench_context_switch
+    return bench_context_switch.main()
+
+
+def _serve():
+    from benchmarks import bench_serve_throughput
+    return bench_serve_throughput.main()
+
+
+def _c2():
+    from benchmarks import bench_translation
+    return bench_translation.main()
+
+
+def _prefill(gate: bool = False):
+    from benchmarks import bench_prefill_continue
+    csv, metrics = bench_prefill_continue.run()
+    if metrics["kernel_bytes"] >= metrics["ref_bytes"]:
+        print(f"FAIL: kernel path gathered {metrics['kernel_bytes']} B, "
+              f"reference gathered {metrics['ref_bytes']} B — the streamed "
+              "path must touch strictly fewer bytes")
+        if gate:              # --only prefill: act as a CI gate
+            sys.exit(1)
+    return csv
+
+
+def _pagesize():
+    from benchmarks import bench_page_size
+    return bench_page_size.main()
+
+
+def _roof():
+    from benchmarks import roofline
+    return roofline.main()
+
+
+SECTIONS: list[tuple[str, str, object]] = [
+    ("fig2", "Fig. 2(b,c,d): matmul VM overhead vs DTLB size", _fig2),
+    ("table1", "Table 1: RiVEC suite (S / V / Vu)", _table1),
+    ("s31", "§3.1: scheduler interrupts + context switches", _s31),
+    ("serve", "Serving split: seed vs Scheduler/Executor (decode + switches)",
+     _serve),
+    ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
+    ("prefill",
+     "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
+     _prefill),
+    ("pagesize",
+     "Beyond-paper: page-size sweep (the TPU dual of the TLB sweep)",
+     _pagesize),
+    ("roof", "Roofline (from dry-run artifacts)", _roof),
+]
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=[k for k, _, _ in SECTIONS],
+                    action="append", default=None,
+                    help="run only the named section(s); repeatable")
+    args = ap.parse_args(argv)
     t0 = time.time()
     csv: list[str] = ["name,us_per_call,derived"]
-
-    section("Fig. 2(b,c,d): matmul VM overhead vs DTLB size")
-    from benchmarks import bench_tlb_sweep
-    csv += bench_tlb_sweep.main()
-
-    section("Table 1: RiVEC suite (S / V / Vu)")
-    from benchmarks import bench_rivec
-    csv += bench_rivec.main()
-
-    section("§3.1: scheduler interrupts + context switches")
-    from benchmarks import bench_context_switch
-    csv += bench_context_switch.main()
-
-    section("Serving split: seed vs Scheduler/Executor (decode + switches)")
-    from benchmarks import bench_serve_throughput
-    csv += bench_serve_throughput.main()
-
-    section("C2: translation counts (burst / element / coalesced)")
-    from benchmarks import bench_translation
-    csv += bench_translation.main()
-
-    section("Beyond-paper: page-size sweep (the TPU dual of the TLB sweep)")
-    from benchmarks import bench_page_size
-    csv += bench_page_size.main()
-
-    section("Roofline (from dry-run artifacts)")
-    from benchmarks import roofline
-    csv += roofline.main()
-
+    for key, title, fn in SECTIONS:
+        if args.only is not None and key not in args.only:
+            continue
+        section(title)
+        if key == "prefill":
+            # the bytes gate aborts only when explicitly selected; a full
+            # run must still emit the complete CSV block
+            csv += fn(gate=args.only is not None)
+        else:
+            csv += fn()
     section(f"CSV (total {time.time() - t0:.0f}s)")
     for line in csv:
         print(line)

@@ -20,5 +20,8 @@ import repro.launch.sharding, repro.launch.mesh
 print("imports OK")
 PY
 
+echo "== kernel differential grids (fail fast on kernel regressions)"
+python -m pytest -q -m kernels "$@"
+
 echo "== fast tests"
-python -m pytest -q -m fast "$@"
+python -m pytest -q -m "fast and not kernels" "$@"

@@ -203,6 +203,11 @@ class ContextSwitcher:
         self.stats.modeled_cycles += self.cost.bytes_move_cycles(nbytes)
         return pool, spilled.extra_state
 
+    def discard(self, seq_id: int) -> None:
+        """Drop a swap record without restoring it (the request was failed
+        by a scheduler reach check) — frees the host-side page copy."""
+        self._swap.pop(seq_id, None)
+
     @property
     def swapped_out(self) -> list[int]:
         return sorted(self._swap)

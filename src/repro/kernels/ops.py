@@ -21,6 +21,9 @@ from repro.kernels.matmul import matmul as _matmul_kernel
 from repro.kernels.paged_attention import (
     paged_decode_attention as _paged_attn_kernel,
 )
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention as _paged_prefill_kernel,
+)
 from repro.kernels.paged_copy import paged_copy as _paged_copy_kernel
 from repro.kernels.paged_copy import paged_copy_at as _paged_copy_at_kernel
 from repro.kernels.paged_gather import paged_gather as _paged_gather_kernel
@@ -121,6 +124,42 @@ paged_decode_attention = jax.jit(
     static_argnames=("page_size", "scale", "window", "use_kernel",
                      "kv_scale"),
 )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("page_size", "scale", "bq", "use_kernel", "kv_scale"),
+)
+def paged_prefill_attention(
+    q: jax.Array,            # [B, S, Hkv, G, D] chunk queries
+    k_pool: jax.Array,       # [P, page, Hkv, D]
+    v_pool: jax.Array,       # [P, page, Hkv, D]
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32
+    *,
+    page_size: int,
+    scale: float | None = None,
+    bq: int = 32,
+    use_kernel: bool = True,
+    kv_scale: float | None = None,
+) -> jax.Array:
+    """Continuation-chunk attention through the page table.
+
+    Kernel path streams KV pages per query block (one translation per
+    page-bounded burst, pages above the causal diagonal skipped); the ref
+    path gathers the whole logical prefix (the pre-kernel hot path, kept
+    as the differential oracle).  int8 pools (``kv_scale``) dequantize on
+    the gather path only, like ``paged_decode_attention``.
+    """
+    if use_kernel and kv_scale is None:
+        return _paged_prefill_kernel(
+            q, k_pool, v_pool, page_table, starts,
+            page_size=page_size, scale=scale, bq=bq,
+        )
+    return ref.paged_prefill_attention_ref(
+        q, k_pool, v_pool, page_table, starts,
+        page_size=page_size, scale=scale, kv_scale=kv_scale,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -161,6 +161,51 @@ def paged_decode_attention_ref(
     return o.astype(q.dtype)
 
 
+def paged_prefill_attention_ref(
+    q: jax.Array,            # [B, S, Hkv, G, D] chunk queries
+    k_pool: jax.Array,       # [P, page, Hkv, D]
+    v_pool: jax.Array,       # [P, page, Hkv, D]
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32 — tokens already cached per row
+    *,
+    page_size: int,
+    scale: float | None = None,
+    kv_scale: float | None = None,
+) -> jax.Array:
+    """Gathered-pages continuation-prefill attention (the oracle).
+
+    Materializes the WHOLE logical prefix — ``max_pages * page_size``
+    tokens — through the page table and runs dense attention with a causal
+    mask on absolute positions (``k_pos <= starts[b] + t``): cache plus
+    committed chunk prefix.  This is the pre-kernel hot path of
+    ``TransformerLM.prefill_continue`` and the differential ground truth
+    the Pallas kernel is tested against.  ``kv_scale`` dequantizes int8 KV
+    pools.  Returns [B, S, Hkv, G, D]."""
+    b, s, hkv, g, d = q.shape
+    max_pages = page_table.shape[1]
+    max_t = max_pages * page_size
+    scale = scale if scale is not None else d ** -0.5
+    page_table = page_table[:b]
+    frames = jnp.maximum(page_table, 0)                      # [B, maxp]
+    k_log = k_pool[frames].reshape(b, max_t, hkv, d)
+    v_log = v_pool[frames].reshape(b, max_t, hkv, d)
+    if kv_scale is not None:  # int8 dequantization
+        k_log = k_log.astype(jnp.float32) * kv_scale
+        v_log = v_log.astype(jnp.float32) * kv_scale
+    positions = starts[:b, None] + jnp.arange(s)[None, :]    # [B, S]
+    k_pos = jnp.arange(max_t)[None, None, :]                 # [1,1,maxT]
+    causal = k_pos <= positions[:, :, None]                  # [B,S,maxT]
+    sc = jnp.einsum(
+        "bshgd,bthd->bshgt", q.astype(jnp.float32),
+        k_log.astype(jnp.float32),
+    ) * scale
+    sc = jnp.where(causal[:, :, None, None, :], sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(causal[:, :, None, None, :], p, 0.0)
+    o = jnp.einsum("bshgt,bthd->bshgd", p, v_log.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def paged_copy_ref(
     src: jax.Array,          # [B, S, W]
     pool: jax.Array,         # [P, page, W]

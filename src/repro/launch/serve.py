@@ -72,7 +72,10 @@ def main() -> None:
     dt = time.perf_counter() - t0
     stats = eng.stats()
     total_tokens = sum(len(r.output) for r in done.values())
-    print(f"completed {len(done)}/{args.requests} requests, "
+    n_done = sum(1 for r in done.values() if r.status == "done")
+    n_failed = sum(1 for r in done.values() if r.status == "failed")
+    print(f"completed {n_done}/{args.requests} requests "
+          f"({n_failed} failed reach checks), "
           f"{total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / dt:.1f} tok/s on CPU interpret)")
     print("scheduler (policy plane) counters:", stats["counters"])

@@ -442,8 +442,11 @@ class TransformerLM:
         table with one translation per burst starting at the (not
         necessarily page-aligned) logical offset (``paged_copy_at``), and
         each chunk query attends causally over cache + chunk through the
-        page table.  This replaces one-token-at-a-time teacher forcing for
-        forked/continued requests with a single device step per chunk.
+        page table (``paged_prefill_attention`` — the Pallas kernel streams
+        KV pages per query block; the jnp oracle gathers the full logical
+        prefix).  This replaces one-token-at-a-time teacher forcing for
+        forked/continued requests with a single device step per chunk, and
+        the batch axis lets same-step forked admissions run as one call.
 
         The host must have mapped pages covering positions
         ``[start, start + chunk)`` (VirtualMemory.append_tokens).
@@ -456,14 +459,8 @@ class TransformerLM:
         hkv, hd, g = cfg.num_kv_heads, cfg.head_dim, cfg.q_per_kv
         positions = start_lens[:, None] + jnp.arange(s)[None, :]    # [B, S]
         x = self.embed(params, tokens)
-        max_pages = state.page_table.shape[1]
-        max_t = max_pages * page
-        frames = jnp.maximum(state.page_table, 0)                   # [B, maxp]
         kv_scale = (1.0 / self.KV_INT8_SCALE
                     if self.kv_dtype == "int8" else None)
-        scale = hd ** -0.5
-        k_pos = jnp.arange(max_t)[None, None, :]                    # [1,1,maxT]
-        causal = k_pos <= positions[:, :, None]                     # [B,S,maxT]
 
         def layer(block_p, x, k_pool, v_pool, is_moe):
             q, k, v = self._block_serve_qkv(block_p, x, positions)
@@ -479,23 +476,14 @@ class TransformerLM:
                 state.page_table, start_lens, chunk_lens, page_size=page,
                 use_kernel=self.use_kernels,
             ).reshape(v_pool.shape)
-            # attend through the page table: gathered logical KV, causal
-            # mask on absolute positions (cache + committed chunk prefix)
-            k_log = k_pool[frames].reshape(b, max_t, hkv, hd)
-            v_log = v_pool[frames].reshape(b, max_t, hkv, hd)
-            if kv_scale is not None:
-                k_log = k_log.astype(jnp.float32) * kv_scale
-                v_log = v_log.astype(jnp.float32) * kv_scale
-            qg = q.reshape(b, s, hkv, g, hd)
-            sc = jnp.einsum(
-                "bshgd,bthd->bshgt", qg.astype(jnp.float32),
-                k_log.astype(jnp.float32),
-            ) * scale
-            sc = jnp.where(causal[:, :, None, None, :], sc, -1e30)
-            p = jax.nn.softmax(sc, axis=-1)
-            p = jnp.where(causal[:, :, None, None, :], p, 0.0)
-            o = jnp.einsum("bshgt,bthd->bshgd", p, v_log.astype(jnp.float32))
-            o = o.astype(x.dtype).reshape(b, s, hkv * g * hd)
+            # attend through the page table: causal mask on absolute
+            # positions (cache + committed chunk prefix)
+            o = ops.paged_prefill_attention(
+                q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
+                state.page_table, start_lens, page_size=page,
+                use_kernel=self.use_kernels, kv_scale=kv_scale,
+            )
+            o = o.reshape(b, s, hkv * g * hd)
             x = x + o @ block_p["attn"]["wo"]
             x = self._ffn_serve(block_p, x, is_moe)
             return x, k_pool, v_pool

@@ -90,11 +90,11 @@ def _decode_step(model: TransformerLM, params: Any, tokens: jax.Array,
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
-def _copy_page(k_pools: jax.Array, v_pools: jax.Array, src: jax.Array,
-               dst: jax.Array):
-    """COW tail-page copy: one frame in each pool, in place."""
-    return (k_pools.at[:, dst].set(k_pools[:, src]),
-            v_pools.at[:, dst].set(v_pools[:, src]))
+def _copy_pages(k_pools: jax.Array, v_pools: jax.Array, srcs: jax.Array,
+                dsts: jax.Array):
+    """COW tail-page copies: all forked frames in each pool, one dispatch."""
+    return (k_pools.at[:, dsts].set(k_pools[:, srcs]),
+            v_pools.at[:, dsts].set(v_pools[:, srcs]))
 
 
 class Executor:
@@ -159,20 +159,27 @@ class Executor:
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         self.counters.inc("prefix_tokens", n)
 
+    def _pad_prompt_batch(self, reqs: list[Request]):
+        """Burst-aligned ``[B, smax]`` prompt matrix + true lengths + the
+        batch's page-table rows — shared by plain and forked admission so
+        padding/slot-lookup policy cannot desynchronize between them."""
+        page = self.cfg.page_size
+        smax = max(len(r.prompt) for r in reqs)
+        smax = -(-smax // page) * page            # burst-align (jit reuse)
+        tok_shape = (len(reqs), smax) + reqs[0].prompt.shape[1:]
+        tokens = np.zeros(tok_shape, np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, : len(r.prompt)] = r.prompt
+        lens = np.array([len(r.prompt) for r in reqs], np.int32)
+        slots = [self.vmem.seq(r.req_id).slot for r in reqs]
+        pt_rows = jnp.take(self._ptab, jnp.asarray(slots), axis=0)
+        return tokens, lens, pt_rows
+
     def prefill(self, reqs: list[Request]) -> list[np.ndarray]:
         """Batched prefill of freshly admitted requests; returns the first
         sampled token per request (request order)."""
         self.sync_page_table()
-        page = self.cfg.page_size
-        smax = max(len(r.prompt) for r in reqs)
-        smax = -(-smax // page) * page            # burst-align
-        tok_shape = (len(reqs), smax) + reqs[0].prompt.shape[1:]
-        tokens = np.zeros(tok_shape, np.int32)
-        lens = np.array([len(r.prompt) for r in reqs], np.int32)
-        for i, r in enumerate(reqs):
-            tokens[i, : len(r.prompt)] = r.prompt
-        slots = [self.vmem.seq(r.req_id).slot for r in reqs]
-        pt_rows = jnp.take(self._ptab, jnp.asarray(slots), axis=0)
+        tokens, lens, pt_rows = self._pad_prompt_batch(reqs)
         with self.counters.timer("prefill"):
             logits, k, v = _prefill_step(
                 self.model, self.params, jnp.asarray(tokens),
@@ -199,31 +206,35 @@ class Executor:
     # DataPlane protocol (driven by the Scheduler)
     # ------------------------------------------------------------------
 
-    def admit_forked(self, req: Request, start_len: int,
-                     tail_copy: tuple[int, int] | None) -> np.ndarray:
-        """COW tail copy + one continuation prefill for the whole prompt
-        chunk — replaces the seed's one-token-at-a-time teacher forcing."""
+    def admit_forked_batch(
+        self, reqs: list[Request], start_lens: list[int],
+        tail_copies: list[tuple[int, int] | None],
+    ) -> list[np.ndarray]:
+        """COW tail copies + ONE batched continuation prefill for all
+        same-step forked admissions (each request's prompt chunk starts at
+        its own logical offset) — replaces both the seed's one-token-at-a-
+        time teacher forcing and the per-request B=1 continuation calls."""
         self.sync_page_table()
-        if tail_copy is not None:
-            src, dst = tail_copy
-            k, v = _copy_page(
+        copies = [tc for tc in tail_copies if tc is not None]
+        if copies:
+            k, v = _copy_pages(
                 self.kv.k_pools, self.kv.v_pools,
-                jnp.asarray(src), jnp.asarray(dst),
+                jnp.asarray([src for src, _ in copies]),
+                jnp.asarray([dst for _, dst in copies]),
             )
             self.kv = self.kv._replace(k_pools=k, v_pools=v)
-        slot = self.vmem.seq(req.req_id).slot
-        chunk = np.asarray(req.prompt, np.int32)[None, :]
-        pt_rows = jnp.take(self._ptab, jnp.asarray([slot]), axis=0)
+        chunks, lens, pt_rows = self._pad_prompt_batch(reqs)
         with self.counters.timer("prefill"):
             logits, k, v = _continue_step(
-                self.model, self.params, jnp.asarray(chunk),
-                jnp.asarray([start_len], jnp.int32),
-                jnp.asarray([len(req.prompt)], jnp.int32),
+                self.model, self.params, jnp.asarray(chunks),
+                jnp.asarray(start_lens, jnp.int32),
+                jnp.asarray(lens),
                 self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
-        self.counters.inc("continuation_prefill_tokens", len(req.prompt))
-        return np.asarray(self.sample(logits)[0])
+        self.counters.inc("continuation_prefill_tokens", int(lens.sum()))
+        first = self.sample(logits)
+        return [np.asarray(first[i]) for i in range(len(reqs))]
 
     def spill(self, req: Request) -> None:
         """Page-granular spill: only the victim's frames leave the device."""
@@ -235,6 +246,10 @@ class Executor:
             req.req_id, self.kv.k_pools, self.kv.v_pools
         )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+
+    def discard(self, req: Request) -> None:
+        """Free a failed request's host-side swap record (never restored)."""
+        self.switcher.discard(req.req_id)
 
     # ------------------------------------------------------------------
     # sampling

@@ -32,7 +32,7 @@ class Request:
     prompt: np.ndarray              # [len] int32 (or [len, K] audio)
     max_new_tokens: int
     output: list[Any] = dataclasses.field(default_factory=list)
-    status: str = "queued"          # queued|running|swapped|done
+    status: str = "queued"          # queued|running|swapped|done|failed
     arrival: int = 0                # engine step of submission
     share_prefix: bool = False      # fork from the engine's resident prefix
 
@@ -88,10 +88,18 @@ class DataPlane(Protocol):
         back in."""
         ...
 
-    def admit_forked(self, req: Request, start_len: int,
-                     tail_copy: tuple[int, int] | None) -> Any:
-        """COW tail-page copy + continuation prefill of ``req.prompt`` at
-        offset ``start_len``; returns the first sampled token."""
+    def discard(self, req: Request) -> None:
+        """Drop a spilled request's swap record without restoring it (the
+        scheduler failed it); frees any host-side page copies."""
+        ...
+
+    def admit_forked_batch(
+        self, reqs: list[Request], start_lens: list[int],
+        tail_copies: list[tuple[int, int] | None],
+    ) -> list[Any]:
+        """COW tail-page copies + ONE batched continuation prefill of all
+        ``reqs[i].prompt`` chunks at offsets ``start_lens[i]``; returns the
+        first sampled token per request (request order)."""
         ...
 
 
@@ -115,10 +123,16 @@ class HostOnlyPlane:
         self.events.append(("restore", req.req_id))
         self.vmem.restore_seq(req.req_id, num_tokens)
 
-    def admit_forked(self, req: Request, start_len: int,
-                     tail_copy: tuple[int, int] | None) -> Any:
-        self.events.append(("admit_forked", req.req_id, start_len, tail_copy))
-        return np.int32(0)
+    def discard(self, req: Request) -> None:
+        self.events.append(("discard", req.req_id))
+
+    def admit_forked_batch(self, reqs, start_lens, tail_copies):
+        self.events.append(
+            ("admit_forked_batch", [r.req_id for r in reqs])
+        )
+        for req, start, tail in zip(reqs, start_lens, tail_copies):
+            self.events.append(("admit_forked", req.req_id, start, tail))
+        return [np.int32(0)] * len(reqs)
 
 
 class Scheduler:
@@ -178,6 +192,49 @@ class Scheduler:
             )
 
     # ------------------------------------------------------------------
+    # reach checks (livelock prevention)
+    # ------------------------------------------------------------------
+
+    def attainable_pages(self) -> int:
+        """Frames preemption could EVER free: the pool minus pages pinned
+        by the resident shared prefix (never a preemption victim)."""
+        pinned = (len(self.vmem.seq(self.PREFIX_ID).pages)
+                  if self.vmem.has_seq(self.PREFIX_ID) else 0)
+        return self.vmem.pool.num_pages - pinned
+
+    def _admission_unreachable(self, req: Request) -> bool:
+        """True if ``req`` could never run mapped to completion: its
+        lifetime page demand (prompt + every future token, fork sharing
+        included) exceeds what preemption can ever free, or the page-table
+        reach.  Admitting it ends either in a restore livelock (if it is
+        ever spilled) or in a degraded scratch-routed decode tail — fail
+        fast at admission instead."""
+        pf = self.vmem.config.pages_for
+        # The FINAL sampled token is never grown into the table — the
+        # request retires inside commit_decode — so the mapped lifetime is
+        # one token short of prompt + max_new (floor: the first decode
+        # position is always mapped, even for max_new == 1).
+        gen = max(req.max_new_tokens, 2) - 1
+        if req.share_prefix:
+            lifetime = self.prefix_len + len(req.prompt) + gen
+            shared = self.prefix_len // self.cfg.page_size
+            own = pf(lifetime) - shared
+        else:
+            lifetime = len(req.prompt) + gen
+            own = pf(lifetime)
+        return (lifetime > self.vmem.config.max_tokens_per_seq
+                or own > self.attainable_pages())
+
+    def _fail(self, req: Request, reason: str) -> None:
+        """Terminal parking for a request that can never fit (reach check):
+        surfaced through ``done`` with status ``failed`` so callers see it
+        and ``run()`` terminates instead of spinning until ``max_steps``."""
+        req.status = "failed"
+        self.done[req.req_id] = req
+        self.counters.inc("failed_unreachable")
+        self.counters.snapshot("failed_" + reason, req.req_id)
+
+    # ------------------------------------------------------------------
     # restore (swap-in)
     # ------------------------------------------------------------------
 
@@ -192,6 +249,19 @@ class Scheduler:
         restored: list[Request] = []
         for _ in range(len(self.swapped)):
             req_id = self.swapped[0]
+            # Reach check: restore re-maps WITHOUT prefix sharing, so a
+            # victim spilled at ``n`` tokens needs pages_for(n) fresh
+            # frames.  If that exceeds what preemption can ever free, the
+            # FIFO head would block the swap queue until ``run(max_steps)``
+            # expires (the ROADMAP livelock) — fail it instead.
+            need = self.vmem.config.pages_for(self._spilled_tokens[req_id])
+            if need > self.attainable_pages():
+                self.swapped.popleft()
+                self._spilled_tokens.pop(req_id)
+                req = self._swap_requests.pop(req_id)
+                self.plane.discard(req)    # free the host-side swap record
+                self._fail(req, "restore")
+                continue
             if len(self.running) >= self.cfg.max_batch:
                 break
             if not self.can_restore(req_id):
@@ -248,21 +318,34 @@ class Scheduler:
 
     def admit(self) -> list[Request]:
         """Pop queue-front requests that fit; returns the plain-prefill
-        batch.  Forked requests are admitted inline (continuation prefill
-        through the data plane) so allocator state evolves in the same
-        order as the seed engine."""
+        batch.  Forked requests have their page tables forked inline (so
+        allocator state evolves in the same order as the seed engine) but
+        their continuation prefills are accumulated and issued as ONE
+        batched data-plane call per step (``admit_forked_batch``)."""
         admitted: list[Request] = []
+        pending: list[tuple[Request, int, tuple[int, int] | None]] = []
         while self.queue and (
-            len(self.running) + len(admitted) < self.cfg.max_batch
+            len(self.running) + len(admitted) + len(pending)
+            < self.cfg.max_batch
         ):
             req = self.queue[0]
+            if self._admission_unreachable(req):
+                self.queue.popleft()
+                self._fail(req, "admit")
+                continue
             need = self.required_pages(req)
             if need > self.vmem.pool.num_free:
+                # pending forks must be committed (running) before victim
+                # selection so they are preemptible, like the seed's inline
+                # admission order
+                self._flush_forked(pending)
                 if not self.preempt_for(need):
                     break                      # nothing left to preempt
             if req.share_prefix:
-                if not self._admit_forked(req):
+                entry = self._fork_bookkeeping(req)
+                if entry is None:
                     break
+                pending.append(entry)
                 self.queue.popleft()
                 continue
             try:
@@ -271,17 +354,20 @@ class Scheduler:
                 break
             self.queue.popleft()
             admitted.append(req)
+        self._flush_forked(pending)
         return admitted
 
-    def _admit_forked(self, req: Request) -> bool:
-        """Fork the resident prefix; prompt chunk runs as one continuation
-        prefill through the data plane (no per-token host loop)."""
+    def _fork_bookkeeping(
+        self, req: Request
+    ) -> tuple[Request, int, tuple[int, int] | None] | None:
+        """Fork the resident prefix's page table for ``req`` (host state
+        only — the data-plane call is deferred to ``_flush_forked``)."""
         page = self.cfg.page_size
         try:
             state = self.vmem.fork_seq(self.PREFIX_ID, req.req_id,
                                        self.prefix_len)
         except OutOfPagesError:
-            return False
+            return None
         tail_copy: tuple[int, int] | None = None
         if self.prefix_len % page:
             # partial tail page is copied; whole pages are shared read-only
@@ -292,15 +378,30 @@ class Scheduler:
             self.vmem.append_tokens(req.req_id, len(req.prompt))
         except OutOfPagesError:
             self.vmem.unmap_seq(req.req_id)    # roll the fork back cleanly
-            return False
-        first = self.plane.admit_forked(req, self.prefix_len, tail_copy)
-        req.status = "running"
-        req.prefix_len = self.prefix_len
-        req.output.append(first)
-        self.running[req.req_id] = req
-        self.slot_of[req.req_id] = state.slot
+            return None
         self.counters.inc("forked_admissions")
-        return True
+        return (req, self.prefix_len, tail_copy)
+
+    def _flush_forked(
+        self,
+        pending: list[tuple[Request, int, tuple[int, int] | None]],
+    ) -> None:
+        """Run all pending forked admissions as ONE batched continuation
+        prefill and commit them to ``running`` (request order)."""
+        if not pending:
+            return
+        reqs = [e[0] for e in pending]
+        firsts = self.plane.admit_forked_batch(
+            reqs, [e[1] for e in pending], [e[2] for e in pending]
+        )
+        for (req, start_len, _), first in zip(pending, firsts):
+            req.status = "running"
+            req.prefix_len = start_len
+            req.output.append(first)
+            self.running[req.req_id] = req
+            self.slot_of[req.req_id] = self.vmem.seq(req.req_id).slot
+        self.counters.inc("fork_batches")
+        pending.clear()
 
     def finish_prefill(self, reqs: list[Request], first_tokens: Any) -> None:
         """Commit a plain-prefill batch: mark running, record accounting."""
@@ -335,7 +436,15 @@ class Scheduler:
                 faults = self.vmem.append_tokens(req_id, grow)
             except OutOfPagesError:
                 if not self.preempt_for(1, protect=req_id):
-                    continue  # stays running; retried next step
+                    # Stays running; retried next step.  Decode proceeds
+                    # anyway (seed semantics): the executor routes writes
+                    # at unmapped positions to the scratch frame, so the
+                    # request keeps producing tokens and terminates — this
+                    # is degraded, not deadlocked.  (The genuinely
+                    # unterminating cases — admission and restore of
+                    # requests whose demand can never be met — are failed
+                    # by the reach checks above.)
+                    continue
                 faults = self.vmem.append_tokens(req_id, grow)
             if faults:
                 self.counters.inc("page_faults", len(faults))

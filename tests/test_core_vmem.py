@@ -222,3 +222,124 @@ class TestTraces:
         pos = np.arange(start, start + n)
         expected = len(np.unique(pos // 16))
         assert burst_trace(pos, 16).size == expected
+
+
+# ---------------------------------------------------------------------------
+# dirty-row drain (the executor's incremental page-table sync contract)
+# ---------------------------------------------------------------------------
+
+
+class TestDrainDirtyRows:
+    """The dirty set must be EXACT: every mutated row, only mutated rows,
+    and empty after a drain — the serving executor applies these deltas to
+    its persistent device table instead of re-uploading the whole satp."""
+
+    def mk(self, **kw):
+        cfg = dict(page_size=4, num_pages=32, max_pages_per_seq=8,
+                   max_seqs=4)
+        cfg.update(kw)
+        vm = VirtualMemory(VMemConfig(**cfg))
+        vm.drain_dirty_rows()               # discard construction state
+        return vm
+
+    def drain(self, vm):
+        rows, vals = vm.drain_dirty_rows()
+        return list(rows), vals
+
+    def test_map_dirties_exactly_one_row(self):
+        vm = self.mk()
+        s = vm.map_seq(0, 6)
+        rows, vals = self.drain(vm)
+        assert rows == [s.slot]
+        np.testing.assert_array_equal(vals[0][:2], s.pages)
+        assert (vals[0][2:] == INVALID_PAGE).all()
+
+    def test_drain_resets_and_is_empty_when_clean(self):
+        vm = self.mk()
+        vm.map_seq(0, 6)
+        assert self.drain(vm)[0] != []
+        rows, vals = self.drain(vm)         # second drain: nothing dirty
+        assert rows == [] and vals.shape == (0, 8)
+
+    def test_tail_append_without_fault_stays_clean(self):
+        vm = self.mk()
+        vm.map_seq(0, 5)                    # page 1 holds tokens 4..7
+        self.drain(vm)
+        assert vm.append_tokens(0, 2) == [] # fits in the tail page
+        assert self.drain(vm)[0] == []      # no PTE changed
+        assert vm.append_tokens(0, 4) != [] # crosses into page 2
+        assert self.drain(vm)[0] == [vm.seq(0).slot]
+
+    def test_multi_seq_ops_dirty_exactly_their_rows(self):
+        vm = self.mk()
+        s0, s1, s2 = vm.map_seq(0, 4), vm.map_seq(1, 4), vm.map_seq(2, 4)
+        self.drain(vm)
+        vm.append_tokens(1, 4)              # faults a page
+        vm.unmap_seq(2)
+        rows, _ = self.drain(vm)
+        assert rows == sorted([s1.slot, s2.slot])
+
+    def test_spill_restore_fork_sequence_matches_full_rebuild(self):
+        """Replaying every drained delta from scratch must reconstruct the
+        host table exactly — after an arbitrary map/fork/spill/restore/
+        unmap sequence (the executor-side equivalence lives in
+        tests/test_serve_executor.py on real device state)."""
+        vm = self.mk(num_pages=16)
+        shadow = np.full((4, 8), INVALID_PAGE, np.int32)
+
+        def apply_delta():
+            rows, vals = vm.drain_dirty_rows()
+            if len(rows):
+                shadow[rows] = vals
+
+        vm.map_seq(-1, 6)                   # prefix
+        apply_delta()
+        vm.fork_seq(-1, 0, 6)               # COW fork (1 whole + tail)
+        vm.append_tokens(0, 5)
+        apply_delta()
+        vm.map_seq(1, 9)
+        apply_delta()
+        vm.spill_seq(1)
+        apply_delta()
+        vm.append_tokens(0, 3)
+        vm.restore_seq(1, 9)
+        apply_delta()
+        vm.unmap_seq(0)
+        apply_delta()
+        np.testing.assert_array_equal(shadow, vm.device_page_table())
+        vm.check_invariants()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 3), min_size=1, max_size=40))
+    def test_random_op_stream_deltas_rebuild_table(self, ops):
+        """Property: under a random map/append/spill/restore stream the
+        drained deltas always rebuild the table, and a clean vmem drains
+        empty."""
+        vm = self.mk(num_pages=24)
+        shadow = np.full((4, 8), INVALID_PAGE, np.int32)
+        live, swapped, next_id = [], [], 0
+        for op in ops:
+            try:
+                if op == 0:                           # map a new seq
+                    vm.map_seq(next_id, 5)
+                    live.append(next_id)
+                    next_id += 1
+                elif op == 1 and live:                # grow the oldest
+                    vm.append_tokens(live[0], 3)
+                elif op == 2 and live:                # spill the newest
+                    sid = live.pop()
+                    vm.spill_seq(sid)
+                    swapped.append(sid)
+                elif op == 3 and swapped:             # restore FIFO
+                    sid = swapped.pop(0)
+                    vm.restore_seq(sid, 5)
+                    live.append(sid)
+            except (OutOfPagesError, ValueError):
+                pass                                  # stream may overflow
+            rows, vals = vm.drain_dirty_rows()
+            if len(rows):
+                shadow[rows] = vals
+        np.testing.assert_array_equal(shadow, vm.device_page_table())
+        rows, _ = vm.drain_dirty_rows()
+        assert len(rows) == 0
+        vm.check_invariants()

@@ -18,6 +18,8 @@ except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
 from repro.core import VMemConfig, VirtualMemory
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.kernels
+
 KEY = jax.random.PRNGKey(42)
 
 

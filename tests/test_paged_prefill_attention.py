@@ -1,0 +1,258 @@
+"""Differential harness for the chunked-prefill paged-attention kernel.
+
+The Pallas kernel (``kernels/paged_prefill_attention.py``) streams KV pages
+per query block through the page table; the jnp oracle
+(``ref.paged_prefill_attention_ref``) gathers the whole logical prefix.
+Both must agree to fp32 tolerance across the full grid of
+
+    page size x chunk length x start offset
+
+including a start offset mid-page, a chunk spanning a page boundary,
+chunk=1 (the decode-like degenerate), and a full-prefix chunk (start=0),
+plus property-based shape/offset cases and a serving-shaped end-to-end
+check against a ``VirtualMemory``-built page table.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
+    from _prop_fallback import given, settings, st
+
+from repro.core import VirtualMemory, VMemConfig
+from repro.kernels import ops, ref
+from repro.kernels.paged_prefill_attention import pages_touched
+
+pytestmark = pytest.mark.kernels
+
+KEY = jax.random.PRNGKey(7)
+
+
+def make_case(page_size, starts, chunks, *, hkv=2, g=2, d=16, bq=4,
+              extra_frames=3, dtype=jnp.float32, seed=0):
+    """Random pools + a page table mapping ``pages_for(start + chunk)``
+    distinct frames per row (frames deliberately shuffled so logical and
+    physical order differ — the translation is load-bearing)."""
+    starts = np.asarray(starts, np.int32)
+    chunks = np.asarray(chunks, np.int32)
+    b = len(starts)
+    totals = starts + chunks
+    max_pages = int(max(-(-int(t) // page_size) for t in totals))
+    n_frames = b * max_pages + extra_frames
+    key = jax.random.fold_in(KEY, seed)
+    ks = jax.random.split(key, 3)
+    k_pool = jax.random.normal(
+        ks[0], (n_frames, page_size, hkv, d), jnp.float32).astype(dtype)
+    v_pool = jax.random.normal(
+        ks[1], (n_frames, page_size, hkv, d), jnp.float32).astype(dtype)
+    rng = np.random.default_rng(seed)
+    frames = rng.permutation(n_frames)
+    table = np.full((b, max_pages), -1, np.int32)
+    fi = 0
+    for row in range(b):
+        need = -(-int(totals[row]) // page_size)
+        table[row, :need] = frames[fi: fi + need]
+        fi += need
+    s = int(chunks.max())
+    q = jax.random.normal(
+        ks[2], (b, s, hkv, g, d), jnp.float32).astype(dtype)
+    return q, k_pool, v_pool, jnp.asarray(table), jnp.asarray(starts), bq
+
+
+def assert_matches(q, k_pool, v_pool, table, starts, bq, chunks,
+                   rtol=2e-5, atol=2e-5):
+    out_k = ops.paged_prefill_attention(
+        q, k_pool, v_pool, table, starts,
+        page_size=k_pool.shape[1], use_kernel=True, bq=bq,
+    )
+    out_r = ops.paged_prefill_attention(
+        q, k_pool, v_pool, table, starts,
+        page_size=k_pool.shape[1], use_kernel=False,
+    )
+    for row, chunk in enumerate(np.asarray(chunks)):
+        np.testing.assert_allclose(
+            np.asarray(out_k)[row, :chunk], np.asarray(out_r)[row, :chunk],
+            rtol=rtol, atol=atol,
+            err_msg=f"row {row} (chunk {chunk}) diverged",
+        )
+
+
+class TestDifferentialGrid:
+    """The core page-size x chunk x offset sweep (fast: runs in check.sh)."""
+
+    @pytest.mark.parametrize("page_size", [4, 8, 16])
+    @pytest.mark.parametrize("chunk", [1, 3, 8, 17])
+    @pytest.mark.parametrize("start", [0, 2, 5, 16])
+    def test_grid(self, page_size, chunk, start):
+        # `start` mid-page (2, 5), page-aligned (0, 16); `chunk` spanning
+        # a page boundary (3 @ start 2, 17), chunk=1, full-prefix (start=0)
+        q, kp, vp, tab, starts, bq = make_case(
+            page_size, [start], [chunk], seed=page_size * 100 + chunk)
+        assert_matches(q, kp, vp, tab, starts, bq, [chunk])
+
+    def test_chunk_spans_page_boundary_mid_page_start(self):
+        # offset 5 in an 8-page: tokens 5..14 straddle pages 0..1
+        q, kp, vp, tab, starts, bq = make_case(8, [5], [10], seed=1)
+        assert_matches(q, kp, vp, tab, starts, bq, [10])
+
+    def test_full_prefix_equals_causal_flash(self):
+        # start=0, one page-aligned chunk: must equal plain causal
+        # attention over the chunk (paged indirection is the identity)
+        page = 4
+        q, kp, vp, tab, starts, bq = make_case(
+            page, [0], [16], hkv=2, g=2, d=16, seed=2)
+        out = ops.paged_prefill_attention(
+            q, kp, vp, tab, starts, page_size=page, use_kernel=True, bq=bq)
+        b, s, hkv, g, d = q.shape
+        frames = np.asarray(tab[0, : s // page])
+        k_log = np.asarray(kp)[frames].reshape(1, s, hkv, d)
+        v_log = np.asarray(vp)[frames].reshape(1, s, hkv, d)
+        expect = ref.flash_attention_ref(
+            jnp.asarray(q[0]).transpose(1, 2, 0, 3).reshape(1, hkv * g, s, d),
+            jnp.asarray(k_log).transpose(0, 2, 1, 3),
+            jnp.asarray(v_log).transpose(0, 2, 1, 3),
+            causal=True,
+        )
+        expect = np.asarray(expect).reshape(hkv, g, s, d).transpose(2, 0, 1, 3)
+        np.testing.assert_allclose(
+            np.asarray(out)[0], expect, rtol=2e-5, atol=2e-5)
+
+
+class TestBatchAndBlocking:
+    def test_batched_rows_with_distinct_offsets(self):
+        # same-step forked admissions: one call, per-row starts/chunks
+        chunks = [6, 1, 11]
+        q, kp, vp, tab, starts, bq = make_case(
+            4, [5, 0, 9], chunks, hkv=2, g=3, d=8, seed=3)
+        assert_matches(q, kp, vp, tab, starts, bq, chunks)
+
+    @pytest.mark.parametrize("bq", [1, 2, 5, 16, 64])
+    def test_query_block_size_sweep(self, bq):
+        # bq not dividing the chunk, bq = 1, and bq > chunk all reduce
+        # to the same math (padded rows sliced off)
+        q, kp, vp, tab, starts, _ = make_case(8, [11], [13], seed=4)
+        assert_matches(q, kp, vp, tab, starts, bq, [13])
+
+    def test_gqa_group_sizes(self):
+        for g, hkv in [(1, 3), (4, 1), (2, 2)]:
+            q, kp, vp, tab, starts, bq = make_case(
+                4, [3, 7], [5, 5], hkv=hkv, g=g, d=8, seed=10 + g)
+            assert_matches(q, kp, vp, tab, starts, bq, [5, 5])
+
+    def test_bf16_inputs(self):
+        q, kp, vp, tab, starts, bq = make_case(
+            8, [6], [9], dtype=jnp.bfloat16, seed=5)
+        assert_matches(q, kp, vp, tab, starts, bq, [9],
+                       rtol=2e-2, atol=2e-2)
+
+
+class TestPagesTouched:
+    """The analytical bytes model must bound-and-beat the gather path."""
+
+    def test_streams_fewer_pages_than_full_gather(self):
+        page, start, chunk, max_pages = 4, 6, 8, 32
+        nqb = -(-chunk // 4)
+        touched = pages_touched(start, chunk, max_pages, page_size=page, bq=4)
+        assert touched < nqb * max_pages        # oracle: max_pages per block
+        # every block sees at least the pages up to `start`
+        assert touched >= nqb * (start // page + 1)
+
+    def test_never_exceeds_table(self):
+        assert pages_touched(10_000, 64, 8, page_size=4, bq=8) == 8 * 8
+
+
+class TestPropertyCases:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        page_size=st.sampled_from([2, 4, 8]),
+        start=st.integers(min_value=0, max_value=37),
+        chunk=st.integers(min_value=1, max_value=19),
+        g=st.sampled_from([1, 2]),
+        bq=st.sampled_from([2, 4, 8]),
+    )
+    def test_random_shapes_and_offsets(self, page_size, start, chunk, g, bq):
+        q, kp, vp, tab, starts, _ = make_case(
+            page_size, [start], [chunk], hkv=1, g=g, d=8,
+            seed=start * 97 + chunk * 13 + page_size)
+        assert_matches(q, kp, vp, tab, starts, bq, [chunk])
+
+
+class TestModelWiring:
+    def test_prefill_continue_kernel_path_matches_jnp_path(self):
+        """The kernel wired inside the jitted ``prefill_continue`` layer
+        scan (with the paged-copy kernels alongside) must produce the same
+        logits and KV pools as the gathered-pages jnp path."""
+        from repro.configs import get_config
+        from repro.models import build_model
+
+        cfg = get_config("qwen2-7b", reduced=True)
+        m_ref = build_model(cfg, remat=False, use_kernels=False)
+        m_ker = build_model(cfg, remat=False, use_kernels=True)
+        params = m_ref.init(jax.random.PRNGKey(1))
+        page, n_pages, max_pages = 4, 24, 8
+        rng = np.random.default_rng(5)
+        b = 2
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(b, 12)), jnp.int32)
+        plens = jnp.asarray([12, 9], jnp.int32)
+        state0 = m_ref.init_kv_state(b, n_pages, page, max_pages)
+        vmem = VirtualMemory(VMemConfig(
+            page_size=page, num_pages=n_pages - 1,
+            max_pages_per_seq=max_pages, max_seqs=b))
+        vmem.map_seq(0, 12)
+        vmem.map_seq(1, 9)
+        vmem.append_tokens(0, 5)
+        vmem.append_tokens(1, 5)
+        table = vmem.device_page_table()
+        state0 = state0._replace(page_table=table)
+        _, state_r = m_ref.prefill(params, prompts, plens, state0)
+        _, state_k = m_ker.prefill(params, prompts, plens, state0)
+        chunk = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(b, 5)), jnp.int32)
+        clens = jnp.asarray([5, 3], jnp.int32)
+        log_r, out_r = m_ref.prefill_continue(params, chunk, plens, clens,
+                                              state_r)
+        log_k, out_k = m_ker.prefill_continue(params, chunk, plens, clens,
+                                              state_k)
+        np.testing.assert_allclose(np.asarray(log_k), np.asarray(log_r),
+                                   rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(
+            np.asarray(out_k.k_pools), np.asarray(out_r.k_pools),
+            rtol=5e-4, atol=5e-4)
+        np.testing.assert_array_equal(
+            np.asarray(out_k.seq_lens), np.asarray(out_r.seq_lens))
+
+
+class TestVirtualMemoryEndToEnd:
+    def test_kernel_reads_through_vmem_built_table(self):
+        """Serving-shaped: map a prefix, fork it, append a chunk through
+        VirtualMemory, write KV through paged_copy_at, then attend — the
+        kernel must agree with the oracle on the table vmem actually built
+        (shared whole pages + copied tail + freshly faulted pages)."""
+        page, hkv, d = 4, 2, 8
+        vmem = VirtualMemory(VMemConfig(
+            page_size=page, num_pages=24, max_pages_per_seq=8, max_seqs=3))
+        prefix_len, chunk = 10, 7
+        vmem.map_seq(-1, prefix_len)
+        vmem.fork_seq(-1, 0, prefix_len)
+        vmem.append_tokens(0, chunk)
+        table = vmem.device_page_table()          # [3, 8]
+        table = table[np.asarray([vmem.seq(0).slot])]
+        n_frames = vmem.pool.num_pages
+        ks = jax.random.split(KEY, 4)
+        k_pool = jax.random.normal(ks[0], (n_frames, page, hkv, d))
+        v_pool = jax.random.normal(ks[1], (n_frames, page, hkv, d))
+        # write the chunk's own KV through the table at the start offset
+        knew = jax.random.normal(ks[2], (1, chunk, hkv * d))
+        starts = jnp.asarray([prefix_len], jnp.int32)
+        lens = jnp.asarray([chunk], jnp.int32)
+        k_pool = ref.paged_copy_at_ref(
+            knew, k_pool.reshape(n_frames, page, hkv * d), table, starts,
+            lens, page_size=page).reshape(n_frames, page, hkv, d)
+        q = jax.random.normal(ks[3], (1, chunk, hkv, 2, d))
+        assert_matches(q, k_pool, v_pool, table, starts, 4, [chunk])

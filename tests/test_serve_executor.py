@@ -108,6 +108,84 @@ class TestSeedEquivalence:
                 [int(x) for x in done_r[i].output], i
 
 
+class TestBatchedForkAdmission:
+    def test_same_step_forks_run_as_one_batched_call(self, model_and_params):
+        """Same-step forked admissions must run as ONE batched continuation
+        prefill (B=3, per-row start offsets, padded chunks) and still be
+        token-identical to the seed's per-token teacher forcing — the
+        page-8 unaligned-prefix mirror of the page-4 equivalence test,
+        with a 1-token chunk riding in the batch."""
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(23)
+        prefix = rng.integers(0, cfg.vocab_size, size=13).astype(np.int32)
+        reqs = [
+            Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=int(l))
+                    .astype(np.int32),
+                    max_new_tokens=6, share_prefix=True)
+            for i, l in enumerate([1, 7, 12])
+        ]
+        serve_cfg = ServeConfig(page_size=8, num_pages=64,
+                                max_pages_per_seq=16, max_batch=4)
+        new_eng, done_n = run_engine(Engine, model, params, serve_cfg, reqs,
+                                     prefix=prefix)
+        ref_eng, done_r = run_engine(ReferenceEngine, model, params,
+                                     serve_cfg, reqs, prefix=prefix)
+        # all three forks admitted in the same step -> exactly one batched
+        # continuation prefill covering 1+7+12 chunk tokens
+        assert new_eng.counters.get("forked_admissions") == 3
+        assert new_eng.counters.get("fork_batches") == 1
+        assert new_eng.counters.get("continuation_prefill_tokens") == 1 + 7 + 12
+        for i in range(len(reqs)):
+            assert [int(x) for x in done_n[i].output] == \
+                [int(x) for x in done_r[i].output], i
+
+
+class TestRestoreLivelock:
+    def test_unreachable_restore_fails_instead_of_spinning(
+            self, model_and_params):
+        """ROADMAP regression (observed via ``repro.launch.serve
+        --prefix-len 10 --num-pages 10``): a fork spilled near the end of
+        its decode needs pages_for(len) UNSHARED frames to restore — more
+        than preemption can ever free next to the pinned 2-page prefix —
+        and pre-fix the engine spun until ``run(max_steps)`` expired."""
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(3)
+        serve_cfg = ServeConfig(page_size=8, num_pages=10,
+                                max_pages_per_seq=12, max_batch=4)
+        eng = Engine(model, params, serve_cfg)
+        eng.preload_prefix(
+            rng.integers(0, cfg.vocab_size, size=10).astype(np.int32))
+        # mapped lifetime 10+30+23 = 63 tokens = 8 pages; 7 own while
+        # sharing (admissible), 8 unshared (beyond the 7 attainable frames)
+        eng.submit(Request(
+            req_id=0,
+            prompt=rng.integers(0, cfg.vocab_size, size=30).astype(np.int32),
+            max_new_tokens=24, share_prefix=True))
+        for _ in range(100):
+            eng.step()
+            a = eng.scheduler.running.get(0)
+            if a is not None and a.remaining == 1:
+                break
+        assert 0 in eng.scheduler.running   # nearly done, still resident
+        # late pressure forces the spill at ~63 tokens
+        eng.submit(Request(
+            req_id=1,
+            prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+            max_new_tokens=4))
+        budget = eng.scheduler.step_i + 50
+        done = eng.run(max_steps=budget)
+        assert eng.scheduler.step_i < budget        # terminated, no livelock
+        assert not eng.scheduler.has_work
+        assert done[0].status == "failed"
+        assert done[1].status == "done"
+        assert eng.counters.get("preemptions") == 1
+        assert eng.counters.get("failed_unreachable") == 1
+        # the failed request's host-side swap record is freed, not leaked
+        assert eng.switcher.swapped_out == []
+        eng.vmem.check_invariants()
+
+
 class TestHotPathContracts:
     def test_page_table_uploads_are_delta_only(self, model_and_params):
         cfg, model, params = model_and_params
@@ -125,6 +203,38 @@ class TestHotPathContracts:
         assert 0 < uploaded < full_upload_rows / 2
         # decode steps with no dirty rows perform no upload at all
         assert eng.counters.get("ptab_syncs") < steps
+
+    def test_incremental_ptab_equals_from_scratch_rebuild(
+            self, model_and_params):
+        """After a fork + spill/restore workload, the executor's
+        delta-updated persistent device table must equal a from-scratch
+        rebuild from the host table (``vmem.device_page_table()``)."""
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(41)
+        serve_cfg = ServeConfig(page_size=4, num_pages=13,
+                                max_pages_per_seq=16, max_batch=3)
+        eng = Engine(model, params, serve_cfg)
+        eng.preload_prefix(
+            rng.integers(0, cfg.vocab_size, size=6).astype(np.int32))
+        for i, (l, fork) in enumerate(
+                [(5, True), (9, False), (7, True), (11, False), (6, True)]):
+            eng.submit(Request(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=l)
+                .astype(np.int32),
+                max_new_tokens=10, share_prefix=fork))
+        done = eng.run()
+        # the workload must actually exercise fork AND spill/restore deltas
+        assert eng.counters.get("forked_admissions") > 0
+        assert eng.counters.get("preemptions") > 0
+        assert len(done) == 5
+        assert all(r.status == "done" for r in done.values())
+        eng.executor.sync_page_table()
+        np.testing.assert_array_equal(
+            np.asarray(eng.executor.device_page_table),
+            np.asarray(eng.vmem.device_page_table()),
+        )
+        eng.vmem.check_invariants()
 
     def test_spill_moves_only_victim_pages(self, model_and_params):
         cfg, model, params = model_and_params

@@ -214,6 +214,170 @@ class TestGrowAndCommit:
         assert sched.decode_plan() is None
 
 
+def drive(sched, max_steps=500, hook=None):
+    """Engine.step loop restated on the bare scheduler (fake data plane)."""
+    steps = 0
+    while sched.has_work and steps < max_steps:
+        steps += 1
+        if hook is not None:
+            hook(sched, steps)
+        sched.begin_step()
+        sched.try_restore()
+        admitted = sched.admit()
+        if admitted:
+            sched.finish_prefill(admitted, [np.int32(0)] * len(admitted))
+        sched.grow_running()
+        if sched.decode_plan() is not None:
+            sched.commit_decode(np.zeros((sched.cfg.max_batch,), np.int32))
+    return steps
+
+
+class TestReachChecks:
+    """Livelock prevention (ROADMAP: restore livelock under capacity
+    pressure, observed via ``--prefix-len 10 --num-pages 10``): requests
+    whose page demand can NEVER be met are failed/parked instead of
+    spinning until ``run(max_steps)`` expires."""
+
+    def _with_prefix(self, plen, **kw):
+        sched, plane = mk_sched(**kw)
+        sched.vmem.map_seq(sched.PREFIX_ID, plen)
+        sched.prefix_len = plen
+        return sched, plane
+
+    def test_attainable_excludes_pinned_prefix_pages(self):
+        sched, _ = self._with_prefix(plen=5, usable_pages=9)   # 2 pinned
+        assert sched.attainable_pages() == 7
+        sched2, _ = mk_sched(usable_pages=9)
+        assert sched2.attainable_pages() == 9
+
+    def test_oversized_plain_request_fails_fast_and_unblocks_queue(self):
+        # mapped lifetime 6+7=13 tokens -> 4 pages > 2 attainable: the seed
+        # policy would head-of-line block the queue forever (admission
+        # needs only pages_for(7)=2, then growth stalls degraded)
+        sched, _ = mk_sched(usable_pages=2)
+        sched.submit(req(0, plen=6, max_new=8))
+        sched.submit(req(1, plen=3, max_new=2))     # feasible: 2 pages
+        admitted = sched.admit()
+        assert [r.req_id for r in admitted] == [1]
+        assert sched.done[0].status == "failed"
+        assert sched.counters.get("failed_unreachable") == 1
+        sched.vmem.check_invariants()
+
+    def test_oversized_forked_request_fails_at_admission(self):
+        # mapped lifetime 5+20+19=44 tokens -> 11 pages, 1 shared -> 10 > 7
+        sched, _ = self._with_prefix(plen=5, usable_pages=9, max_pages=16)
+        sched.submit(req(7, plen=20, max_new=20, share_prefix=True))
+        assert sched.admit() == []
+        assert sched.done[7].status == "failed"
+        assert sched.vmem.num_seqs == 1             # fork never mapped
+        sched.vmem.check_invariants()
+
+    def test_restore_unreachable_victim_fails_instead_of_livelock(self):
+        """The ROADMAP livelock: restore re-maps WITHOUT prefix sharing, so
+        a fork spilled near the end of its decode needs more frames than
+        preemption can ever free next to the pinned prefix — pre-fix the
+        swap-queue head spun until max_steps."""
+        # page 4, 9 usable frames, prefix 5 tokens (2 pinned) -> 7
+        # attainable = 28 tokens; A's mapped lifetime 5+12+14=31 -> 8
+        # pages unshared (> 7) but only 7 own while sharing (admissible)
+        sched, plane = self._with_prefix(plen=5, usable_pages=9, max_pages=16,
+                                         max_batch=3)
+        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
+        state = {"submitted": False}
+
+        def late_pressure(s, _step):
+            a = s.running.get(0)
+            if a is not None and a.remaining == 1 and not state["submitted"]:
+                state["submitted"] = True
+                s.submit(req(1, plen=8, max_new=4))   # forces the spill
+        steps = drive(sched, max_steps=200, hook=late_pressure)
+        assert steps < 200 and not sched.has_work    # no livelock
+        assert sched.done[0].status == "failed"
+        assert sched.done[1].status == "done"
+        assert sched.counters.get("preemptions") == 1
+        assert sched.counters.get("failed_unreachable") == 1
+        # the plane was told to drop the dead swap record
+        assert ("discard", 0) in plane.events
+        sched.vmem.check_invariants()
+
+    def test_grow_stall_after_unshared_restore_still_terminates(self):
+        """A spilled EARLY restores fine (small footprint) but, unshared,
+        can no longer grow to its full lifetime next to the pinned prefix.
+        Growth stalls are degraded, not deadlocked (decode proceeds with
+        scratch-routed writes, seed semantics) — the run must terminate
+        without tripping the reach checks."""
+        sched, _ = self._with_prefix(plen=5, usable_pages=9, max_pages=16,
+                                     max_batch=3)
+        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
+        state = {"submitted": False}
+
+        def early_pressure(s, step):
+            if step == 3 and not state["submitted"]:
+                state["submitted"] = True
+                s.submit(req(1, plen=16, max_new=4))  # forces an early spill
+        steps = drive(sched, max_steps=200, hook=early_pressure)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("preemptions") == 1
+        assert sched.counters.get("restores") == 1   # it DID come back
+        assert sched.counters.get("failed_unreachable") == 0
+        assert sched.done[0].status == "done"
+        assert sched.done[1].status == "done"
+        sched.vmem.check_invariants()
+
+    def test_page_boundary_request_is_not_spuriously_failed(self):
+        # plen 9, max_new 8: only 16 tokens are ever MAPPED (the final
+        # sampled token retires unmapped), which fits 2 pages exactly —
+        # a pages_for(prompt + max_new) check would fail it spuriously
+        sched, _ = mk_sched(page_size=8, usable_pages=2, max_pages=8)
+        sched.submit(req(0, plen=9, max_new=8))
+        steps = drive(sched, max_steps=100)
+        assert steps < 100 and not sched.has_work
+        assert sched.counters.get("failed_unreachable") == 0
+        assert sched.done[0].status == "done"
+        assert len(sched.done[0].output) == 8
+        sched.vmem.check_invariants()
+
+    def test_feasible_forked_workload_has_no_false_positives(self):
+        """The exact ``--prefix-len 10 --num-pages 10`` launcher workload
+        (16 forked requests) completes; the reach checks must not fail
+        anything that can finish."""
+        sched, _ = self._with_prefix(plen=10, page_size=8, usable_pages=9,
+                                     max_pages=9, max_batch=4)
+        rng = np.random.default_rng(0)
+        rng.integers(0, 1000, size=10)               # the prefix token draw
+        for i in range(16):
+            plen = int(rng.integers(12, 25))
+            rng.integers(0, 1000, size=plen)         # prompt token draw
+            sched.submit(Request(
+                req_id=i, prompt=np.arange(plen, dtype=np.int32),
+                max_new_tokens=24, share_prefix=True))
+        steps = drive(sched, max_steps=1000)
+        assert steps < 1000 and not sched.has_work
+        assert sched.counters.get("failed_unreachable") == 0
+        assert all(r.status == "done" for r in sched.done.values())
+        assert len(sched.done) == 16
+        sched.vmem.check_invariants()
+
+
+class TestBatchedForkAdmission:
+    def test_same_step_forks_issue_one_plane_call(self):
+        sched, plane = mk_sched(page_size=4, usable_pages=20, max_pages=16,
+                                max_batch=4)
+        sched.vmem.map_seq(sched.PREFIX_ID, 6)
+        sched.prefix_len = 6
+        for i in range(3):
+            sched.submit(req(i, plen=3 + i, share_prefix=True))
+        assert sched.admit() == []
+        batches = [e for e in plane.events if e[0] == "admit_forked_batch"]
+        assert len(batches) == 1 and batches[0][1] == [0, 1, 2]
+        assert sched.counters.get("fork_batches") == 1
+        assert sched.counters.get("forked_admissions") == 3
+        assert set(sched.running) == {0, 1, 2}
+        # request-order output commit: every fork got its first token
+        assert all(len(sched.running[i].output) == 1 for i in range(3))
+        sched.vmem.check_invariants()
+
+
 def test_scheduler_imports_no_jax_arrays():
     """The policy plane must stay host-only: no jnp/jax usage in module."""
     import inspect

@@ -11,14 +11,24 @@ contract).  Sections (select a subset with ``--only``):
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-``--only prefill`` additionally acts as a CI gate: it exits nonzero if the
-chunked-prefill kernel path gathers at least as many bytes as the
-gathered-pages reference path.
+Two sections double as CI gates when explicitly selected:
+  * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
+    gathers at least as many bytes as the gathered-pages reference path;
+  * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
+    token-identical to the seed engine AND host syncs per decoded token
+    are strictly below 1.0 AND the mean fused horizon exceeds 1.0 (batched
+    K=1 decode already syncs less than once per token, so the sync ratio
+    alone cannot detect the horizon silently regressing to K=1).
+
+The serve section also appends its metrics to ``BENCH_serve.json`` at the
+repo root — the machine-readable perf trajectory across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 
@@ -42,9 +52,55 @@ def _s31():
     return bench_context_switch.main()
 
 
-def _serve():
+def _record_serve_trajectory(metrics: dict) -> None:
+    """Append the serve metrics to ``BENCH_serve.json`` (repo root): a JSON
+    array, one record per benchmark run, so the perf trajectory across PRs
+    is machine-readable instead of buried in CI logs."""
+    path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except (OSError, ValueError):
+            history = None
+        if not isinstance(history, list):
+            # never silently overwrite an existing trajectory: move the
+            # unreadable/malformed file aside and start a fresh history
+            backup = path.with_name(path.name + ".corrupt")
+            path.replace(backup)
+            print(f"WARNING: {path.name} was unreadable; moved to "
+                  f"{backup.name}, starting a fresh trajectory")
+            history = []
+    history.append(
+        {"t": time.strftime("%Y-%m-%dT%H:%M:%S"), "metrics": metrics}
+    )
+    path.write_text(json.dumps(history, indent=2) + "\n")
+    print(f"trajectory -> {path} ({len(history)} records)")
+
+
+def _serve(gate: bool = False):
     from benchmarks import bench_serve_throughput
-    return bench_serve_throughput.main()
+    csv, metrics = bench_serve_throughput.run()
+    _record_serve_trajectory(metrics)
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append("auto-horizon greedy outputs diverged from the "
+                        "seed engine")
+    if metrics["host_syncs_per_token"] >= 1.0:
+        failures.append(
+            f"host syncs per decoded token = "
+            f"{metrics['host_syncs_per_token']:.3f} (must be < 1.0: the "
+            "fused horizon must amortize the per-token host round-trip)")
+    if metrics["mean_horizon"] <= 1.0:
+        failures.append(
+            f"mean fused horizon = {metrics['mean_horizon']:.2f} (must be "
+            "> 1.0: the auto horizon never opened on the quiet sweep "
+            "workload — fusion is silently disabled)")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only serve: act as a CI gate
+        sys.exit(1)
+    return csv
 
 
 def _c2():
@@ -103,9 +159,9 @@ def main(argv: list[str] | None = None) -> None:
         if args.only is not None and key not in args.only:
             continue
         section(title)
-        if key == "prefill":
-            # the bytes gate aborts only when explicitly selected; a full
-            # run must still emit the complete CSV block
+        if key in ("prefill", "serve"):
+            # the gates abort only when explicitly selected; a full run
+            # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)
         else:
             csv += fn()

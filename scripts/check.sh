@@ -25,3 +25,6 @@ python -m pytest -q -m kernels "$@"
 
 echo "== fast tests"
 python -m pytest -q -m "fast and not kernels" "$@"
+
+echo "== serve gate (fused decode horizon must amortize host syncs)"
+python -m benchmarks.run --only serve

@@ -203,6 +203,11 @@ class ContextSwitcher:
         self.stats.modeled_cycles += self.cost.bytes_move_cycles(nbytes)
         return pool, spilled.extra_state
 
+    def spilled_len(self, seq_id: int) -> int:
+        """Token length recorded when ``seq_id`` was spilled — the only
+        length a restore may legally re-map (KeyError if not spilled)."""
+        return self._swap[seq_id].num_tokens
+
     def discard(self, seq_id: int) -> None:
         """Drop a swap record without restoring it (the request was failed
         by a scheduler reach check) — frees the host-side page copy."""

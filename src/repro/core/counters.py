@@ -43,6 +43,17 @@ class PerfCounters:
     def get(self, name: str) -> int:
         return self.counters[name]
 
+    def ratio(self, num: str, den: str) -> float:
+        """``counters[num] / counters[den]`` (0.0 when the denominator is 0).
+
+        The serving gate reads ``ratio("host_syncs", "decode_tokens")`` —
+        host interventions per decoded token, the amortization the fused
+        decode horizon exists to buy (< 1.0 means the scalar/OS plane
+        stayed off the per-token critical path).
+        """
+        d = self.counters[den]
+        return self.counters[num] / d if d else 0.0
+
     # ---- snapshots -----------------------------------------------------------
 
     def snapshot(self, event: str, payload: Any = None) -> None:

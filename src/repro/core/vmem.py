@@ -302,6 +302,35 @@ class VirtualMemory:
         self._lens[state.slot] = new_len
         return faults
 
+    def append_tokens_batch(
+        self, grows: Sequence[tuple[int, int]]
+    ) -> list[PageFault]:
+        """All-or-nothing growth of several sequences at once.
+
+        The serving scheduler pre-faults every page a fused K-step decode
+        horizon will touch through ONE call, so the device page table is
+        flushed once per horizon (``drain_dirty_rows``) instead of once per
+        token.  ``grows`` is ``[(seq_id, n_tokens), ...]``.  If the pool
+        cannot back the ENTIRE batch, :class:`OutOfPagesError` is raised
+        with no sequence modified (precise-exception semantics, batch-wide)
+        — callers collapse the horizon to K=1 and fall back to the
+        per-step fault path, which may preempt.
+        """
+        need = 0
+        for seq_id, n in grows:
+            state = self._seqs[seq_id]
+            new_len = state.length + n
+            if new_len > self.config.max_tokens_per_seq:
+                raise ValueError("sequence exceeds page-table reach")
+            need += max(0, self.config.pages_for(new_len) - len(state.pages))
+        if need > self.pool.num_free:
+            raise OutOfPagesError(requested=need, available=self.pool.num_free)
+        faults: list[PageFault] = []
+        for seq_id, n in grows:
+            if n > 0:
+                faults.extend(self.append_tokens(seq_id, n))
+        return faults
+
     def unmap_seq(self, seq_id: int) -> None:
         state = self._seqs.pop(seq_id)
         self.pool.free(state.pages)

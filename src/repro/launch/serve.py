@@ -31,6 +31,10 @@ def main() -> None:
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="preload a shared prefix; requests fork from it "
                          "(continuation prefill through the Executor)")
+    ap.add_argument("--max-horizon", type=int, default=8,
+                    help="fused decode horizon cap: up to K chained decode "
+                         "steps per dispatch with on-device sampling "
+                         "(1 disables fusion)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -48,6 +52,7 @@ def main() -> None:
             // args.page_size + 2
         ),
         max_batch=args.max_batch,
+        max_horizon=args.max_horizon,
     ))
     rng = np.random.default_rng(args.seed)
     share = args.prefix_len > 0
@@ -85,6 +90,12 @@ def main() -> None:
           f"{stats['counters'].get('ptab_syncs', 0)} syncs over "
           f"{eng.scheduler.step_i} steps "
           f"(seed engine: {eng.scheduler.step_i * eng.cfg.max_batch} rows)")
+    c = eng.counters
+    print(f"  fused decode horizon: mean "
+          f"{c.get('decode_horizon') / max(c.get('decode_dispatches'), 1):.2f}"
+          f" over {c.get('decode_dispatches')} dispatches, "
+          f"{c.ratio('host_syncs', 'decode_tokens'):.3f} host syncs/token, "
+          f"{c.get('horizon_collapses')} pool-pressure collapses")
     print("pool:", stats["pool"])
 
 

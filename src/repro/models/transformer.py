@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.vmem import INVALID_PAGE
 from repro.kernels import ops, ref  # noqa: F401
 from repro.models import layers as L
 from repro.models import moe as M
@@ -595,3 +596,66 @@ class TransformerLM:
         return logits, PagedKVState(
             k_pools, v_pools, state.page_table, new_lens
         )
+
+    def decode_multi_step(
+        self,
+        params: Params,
+        tokens: jax.Array,       # [B] (or [B, K] audio) last sampled tokens
+        state: PagedKVState,
+        steps_left: jax.Array,   # [B] int32 — active inner steps per lane
+        rng: jax.Array,          # PRNG key (threaded; ignored when greedy)
+        temperature: jax.Array,  # scalar     (ignored when greedy)
+        *,
+        horizon: int,
+        greedy: bool,
+    ) -> tuple[jax.Array, PagedKVState, jax.Array]:
+        """Fused K-token decode: ``lax.scan`` over ``horizon`` chained
+        :meth:`decode_step` calls with ON-DEVICE sampling.
+
+        The scalar/OS plane intervenes once per *horizon*, not once per
+        token (the AraOS amortization contract applied to the decode loop):
+        each inner step writes KV at ``seq_lens``, attends through the page
+        table, samples the next token on device (greedy argmax, or
+        temperature/categorical with the PRNG key split exactly like the
+        host path — one split per step, carry ``split(key)[0]``, consume
+        ``split(key)[1]`` — so fused and step-wise stochastic streams are
+        identical), and feeds it straight back into the next step.
+
+        Per-lane retirement is masked on device: lane ``i`` is active at
+        inner step ``t`` iff ``t < steps_left[i]``.  Inactive lanes get
+        their page-table row masked to the invalid sentinel, which routes
+        their KV write to the reserved scratch frame and freezes their
+        ``seq_lens`` (``decode_step``'s existing guard) — the table itself
+        is never rewritten.  The host must have pre-faulted pages covering
+        every position the horizon touches (``VirtualMemory.
+        append_tokens_batch``).
+
+        Returns ``(token_block [horizon, B, ...], state, rng)``; block rows
+        at ``t >= steps_left[i]`` are scratch output the caller discards.
+        """
+        ptab = state.page_table
+
+        def body(carry, t):
+            toks, k_pools, v_pools, seq_lens, key = carry
+            active = t < steps_left                           # [B] bool
+            masked = jnp.where(active[:, None], ptab, INVALID_PAGE)
+            st = PagedKVState(k_pools, v_pools, masked, seq_lens)
+            logits, ns = self.decode_step(params, toks, st)
+            if greedy:
+                new_tok = jnp.argmax(logits, axis=-1)
+            else:
+                key, sub = jax.random.split(key)
+                new_tok = jax.random.categorical(
+                    sub, logits / temperature, axis=-1
+                )
+            new_tok = new_tok.astype(toks.dtype)
+            lane = active.reshape((-1,) + (1,) * (toks.ndim - 1))
+            toks = jnp.where(lane, new_tok, toks)
+            return (toks, ns.k_pools, ns.v_pools, ns.seq_lens, key), new_tok
+
+        (tokens, k_pools, v_pools, seq_lens, rng), block = jax.lax.scan(
+            body,
+            (tokens, state.k_pools, state.v_pools, state.seq_lens, rng),
+            jnp.arange(horizon),
+        )
+        return block, PagedKVState(k_pools, v_pools, ptab, seq_lens), rng

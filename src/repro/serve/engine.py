@@ -33,6 +33,23 @@ precise accounting; preemption when the pool is exhausted (§3.1 context
 switch); scheduler quanta and tick accounting (100 Hz analogue); perf
 counters + snapshot FIFO (the paper's measurement infrastructure).
 
+**Fused multi-step decode (the amortization contract on the decode
+loop).**  AraOS's result is that VM overhead stays under 3.5% only
+because translation is paid once per page-bounded burst, not once per
+element.  The decode loop restates that per token: instead of one host
+round-trip per generated token (dispatch one step, sync the sampled
+token to host, replan pages, re-upload the token), the Scheduler
+computes a safe horizon K — collapsed to 1 whenever a queued admission
+or restore could become due mid-horizon, or when the pool cannot
+pre-fault all K steps of growth — pre-faults every page the horizon will
+touch in ONE batched allocation (``VirtualMemory.append_tokens_batch``,
+one dirty-row flush), and the Executor runs K chained decode steps in a
+single dispatch with ON-DEVICE sampling and per-lane retire masking
+(``Executor.decode_multi``).  The scalar/OS plane intervenes once per
+horizon: ``counters["host_syncs"] / counters["decode_tokens"]`` is the
+measured amortization (the ``benchmarks/run.py --only serve`` gate
+requires it < 1.0).  K=1 reproduces pre-horizon behavior exactly.
+
 The device pool reserves its LAST frame as scratch for masked decode
 lanes: the engine hands ``VirtualMemory`` one frame fewer than physically
 allocated.  The frozen pre-split implementation lives in
@@ -145,13 +162,19 @@ class Engine:
         if admitted:
             first = self.executor.prefill(admitted)
             sched.finish_prefill(admitted, first)
-        sched.grow_running()
-        plan = sched.decode_plan()
+        # ``plan_decode`` picks a fused horizon K (1 under pool pressure or
+        # pending admissions/restores) and pre-faults every page K steps
+        # will touch in one batched allocation
+        plan = sched.plan_decode()
         if plan is not None:
-            sampled = self.executor.decode(
-                plan.tokens, plan.pre_lens, plan.active
-            )
-            sched.commit_decode(sampled)
+            if plan.horizon > 1:
+                block = self.executor.decode_multi(plan)
+                sched.commit_decode(block, horizon=plan.horizon)
+            else:
+                sampled = self.executor.decode(
+                    plan.tokens, plan.pre_lens, plan.active
+                )
+                sched.commit_decode(sampled)
 
     # ------------------------------------------------------------------
     # stats

@@ -15,7 +15,13 @@ spill/restore.  Here:
     (``ContextSwitcher.spill_kv``/``restore_kv`` — page-granular, the
     paper's §3.1 context-switch cost in actually-moved bytes);
   * inactive decode lanes are masked *inside* the jitted step from a [B]
-    bool mask, not by rewriting table rows on the host.
+    bool mask, not by rewriting table rows on the host;
+  * decode runs in fused K-step horizons (``decode_multi``): one dispatch
+    chains K ``decode_step``s with on-device sampling (greedy argmax or
+    temperature/categorical with a threaded PRNG key) and per-lane retire
+    masking, so the host round-trip — and the page-table delta sync — is
+    paid once per horizon, not once per token (``host_syncs`` /
+    ``decode_horizon`` counters).
 
 The executor implements the scheduler's :class:`~repro.serve.scheduler.
 DataPlane` protocol; it makes no policy decisions.
@@ -38,7 +44,7 @@ from repro.core import (
     VirtualMemory,
 )
 from repro.models.transformer import PagedKVState, TransformerLM
-from repro.serve.scheduler import Request, ServeConfig
+from repro.serve.scheduler import DecodePlan, Request, ServeConfig
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +93,30 @@ def _decode_step(model: TransformerLM, params: Any, tokens: jax.Array,
     state = PagedKVState(k_pools, v_pools, masked, pre_lens)
     logits, ns = model.decode_step(params, tokens, state)
     return logits, ns.k_pools, ns.v_pools
+
+
+@functools.partial(jax.jit, static_argnums=(0, 10, 11), donate_argnums=(3, 4))
+def _decode_multi_step(model: TransformerLM, params: Any, tokens: jax.Array,
+                       k_pools: jax.Array, v_pools: jax.Array,
+                       ptab: jax.Array, pre_lens: jax.Array,
+                       steps_left: jax.Array, rng: jax.Array,
+                       temperature: jax.Array, horizon: int, greedy: bool):
+    """Fused K-step decode horizon with ON-DEVICE sampling.
+
+    One dispatch runs ``horizon`` chained ``model.decode_step`` calls
+    (``lax.scan`` inside :meth:`TransformerLM.decode_multi_step`), sampling
+    each next token on device and feeding it straight back — the host
+    round-trip per token (sample transfer, replan, token re-upload)
+    becomes one round-trip per horizon.  Per-lane retirement is masked on
+    device from ``steps_left``; the page table is read-only (masking
+    happens per inner step, the table itself is never rewritten).
+    """
+    state = PagedKVState(k_pools, v_pools, ptab, pre_lens)
+    block, ns, rng = model.decode_multi_step(
+        params, tokens, state, steps_left, rng, temperature,
+        horizon=horizon, greedy=greedy,
+    )
+    return block, ns.k_pools, ns.v_pools, rng
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -185,13 +215,17 @@ class Executor:
                 self.model, self.params, jnp.asarray(tokens),
                 jnp.asarray(lens), self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
+            # async dispatch returns immediately; block so the timer
+            # measures execution, not dispatch
+            jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         first = self.sample(logits)
         return [np.asarray(first[i]) for i in range(len(reqs))]
 
     def decode(self, tokens: np.ndarray, pre_lens: np.ndarray,
                active: np.ndarray) -> np.ndarray:
-        """One full-slot decode step; returns sampled tokens by slot."""
+        """One full-slot decode step (the horizon's K=1 collapse path);
+        returns sampled tokens by slot."""
         self.sync_page_table()
         with self.counters.timer("decode"):
             logits, k, v = _decode_step(
@@ -199,8 +233,39 @@ class Executor:
                 self.kv.k_pools, self.kv.v_pools, self._ptab,
                 jnp.asarray(pre_lens), jnp.asarray(active),
             )
+            jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self.counters.inc("decode_dispatches")
+        self.counters.inc("decode_horizon")
         return self.sample(logits)
+
+    def decode_multi(self, plan: DecodePlan) -> np.ndarray:
+        """Fused K-step decode horizon: ONE dispatch runs ``plan.horizon``
+        chained decode steps with on-device sampling and per-lane retire
+        masking, then transfers the whole ``[K, B, ...]`` token block in
+        one host sync.  ``Executor.sample``'s per-token host path does not
+        run on this path.  The scheduler has already pre-faulted every page
+        the horizon touches, so exactly one page-table delta sync happens
+        per horizon."""
+        self.sync_page_table()
+        with self.counters.timer("decode"):
+            block, k, v, rng = _decode_multi_step(
+                self.model, self.params, jnp.asarray(plan.tokens),
+                self.kv.k_pools, self.kv.v_pools, self._ptab,
+                jnp.asarray(plan.pre_lens), jnp.asarray(plan.steps_left),
+                # plain float -> weak-typed scalar under jit: logits /
+                # temperature keeps the logits dtype, exactly like the
+                # host path's division by the Python float
+                self._rng, float(self.cfg.temperature),
+                plan.horizon, self.cfg.greedy,
+            )
+            jax.block_until_ready(block)
+        self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self._rng = rng
+        self.counters.inc("host_syncs")
+        self.counters.inc("decode_dispatches")
+        self.counters.inc("decode_horizon", plan.horizon)
+        return np.asarray(block)
 
     # ------------------------------------------------------------------
     # DataPlane protocol (driven by the Scheduler)
@@ -231,6 +296,7 @@ class Executor:
                 jnp.asarray(lens),
                 self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
+            jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         self.counters.inc("continuation_prefill_tokens", int(lens.sum()))
         first = self.sample(logits)
@@ -242,6 +308,14 @@ class Executor:
 
     def restore(self, req: Request, num_tokens: int) -> None:
         """Page-granular restore into freshly allocated frames."""
+        # the DataPlane protocol passes the scheduler's recorded spill
+        # length; the switcher's own record is authoritative — they must
+        # agree or the re-mapped footprint would silently diverge
+        assert num_tokens == self.switcher.spilled_len(req.req_id), (
+            f"restore of req {req.req_id}: scheduler says {num_tokens} "
+            f"tokens, switcher spilled "
+            f"{self.switcher.spilled_len(req.req_id)}"
+        )
         k, v, _ = self.switcher.restore_kv(
             req.req_id, self.kv.k_pools, self.kv.v_pools
         )
@@ -256,6 +330,10 @@ class Executor:
     # ------------------------------------------------------------------
 
     def sample(self, logits: jax.Array) -> np.ndarray:
+        """Host-path sampling (prefill boundaries and the K=1 decode
+        collapse path); every call forces one device->host sync.  The
+        fused multi-step decode path samples on device instead."""
+        self.counters.inc("host_syncs")
         if self.cfg.greedy:
             return np.asarray(jnp.argmax(logits, axis=-1))
         self._rng, key = jax.random.split(self._rng)

@@ -254,6 +254,11 @@ class ReferenceEngine:
             logits, new_state = self.model.prefill(
                 self.params, jnp.asarray(tokens), jnp.asarray(lens), state
             )
+            # measurement fix only (no behavior change): async dispatch
+            # returns immediately, so an unblocked timer measured dispatch
+            # cost, not execution — the before/after benchmark ratios were
+            # fiction
+            jax.block_until_ready(logits)
         self.kv = self.kv._replace(
             k_pools=new_state.k_pools, v_pools=new_state.v_pools
         )
@@ -327,6 +332,7 @@ class ReferenceEngine:
             logits, new_state = self.model.decode_step(
                 self.params, jnp.asarray(tokens), state
             )
+            jax.block_until_ready(logits)   # measurement fix, see prefill
         self.kv = self.kv._replace(
             k_pools=new_state.k_pools, v_pools=new_state.v_pools
         )

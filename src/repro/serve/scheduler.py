@@ -57,15 +57,29 @@ class ServeConfig:
     temperature: float = 1.0
     seed: int = 0
     tick_every_steps: int = 50      # scheduler tick accounting cadence
+    #: fused decode horizon cap: the executor may run up to this many
+    #: chained decode steps per dispatch (1 disables fusion).  The auto
+    #: horizon is rounded down to a power of two so the jit cache stays
+    #: O(log max_horizon) entries.
+    max_horizon: int = 8
 
 
 @dataclasses.dataclass
 class DecodePlan:
-    """Full-slot decode batch: host arrays only, indexed by device slot."""
+    """Full-slot decode batch: host arrays only, indexed by device slot.
+
+    ``horizon`` is the number of chained decode steps the executor runs in
+    one dispatch; ``steps_left[slot]`` is how many of those inner steps the
+    lane participates in (it retires — stops writing KV, freezes its
+    position — after that many, masked on device).  ``horizon == 1`` is
+    exactly the pre-horizon single-step plan.
+    """
 
     tokens: np.ndarray              # [B, ...] last sampled token per slot
     pre_lens: np.ndarray            # [B] position of the new token
     active: np.ndarray              # [B] bool — slots decoding this step
+    horizon: int = 1                # fused inner decode steps this dispatch
+    steps_left: np.ndarray | None = None   # [B] int32 active steps per lane
 
 
 class DataPlane(Protocol):
@@ -454,7 +468,77 @@ class Scheduler:
                                    + self.cost.post_fault_flush_cycles),
                 )
 
-    def decode_plan(self) -> DecodePlan | None:
+    @staticmethod
+    def _steps_until_retire(r: Request) -> int:
+        """Decode steps before ``r`` retires: it commits one token per step
+        and retires when ``len(output) >= max_new_tokens`` — checked AFTER
+        the append, so even a satisfied request decodes once more (seed
+        semantics; the reason the floor is 1)."""
+        return max(1, r.remaining)
+
+    def plan_horizon(self) -> int:
+        """Safe fused-decode horizon K for this step (pure policy — no
+        allocation happens here).
+
+        The scalar/OS plane may stay off the data path for K tokens iff no
+        scheduler event can become due mid-horizon: pending admissions and
+        restores collapse K to 1, because every retirement changes the
+        slot/frame availability their policy reads.  Otherwise K is capped
+        by the longest-living lane (shorter lanes retire mid-horizon inside
+        the fused step, masked on device) and rounded down to a power of
+        two so the executor's jit cache stays O(log max_horizon).
+        """
+        if self.cfg.max_horizon <= 1 or not self.running:
+            return 1
+        if self.queue or self.swapped:
+            return 1
+        k = min(
+            self.cfg.max_horizon,
+            max(self._steps_until_retire(r) for r in self.running.values()),
+        )
+        return 1 << (k.bit_length() - 1)
+
+    def grow_horizon(self, horizon: int) -> int:
+        """Pre-fault every page a K-step fused decode will touch, as ONE
+        all-or-nothing batched allocation (one dirty-row flush when the
+        executor syncs).  Returns the horizon actually in effect: under
+        pool pressure (or a reach breach) it collapses to 1 and the
+        per-step fault path — :meth:`grow_running`, with its preemption
+        fallback — reproduces pre-horizon behavior exactly."""
+        if horizon <= 1:
+            self.grow_running()
+            return 1
+        grows: list[tuple[int, int]] = []
+        for req_id, r in self.running.items():
+            steps = min(horizon, self._steps_until_retire(r))
+            # a retiring lane's FINAL sampled token is never mapped (it
+            # retires inside commit_decode), hence the -1
+            target = r.total_len + steps - 1
+            grow = target - self.vmem.seq_len(req_id)
+            if grow > 0:
+                grows.append((req_id, grow))
+        try:
+            faults = self.vmem.append_tokens_batch(grows)
+        except (OutOfPagesError, ValueError):
+            self.counters.inc("horizon_collapses")
+            self.grow_running()
+            return 1
+        if faults:
+            self.counters.inc("page_faults", len(faults))
+            self.counters.inc(
+                "modeled_fault_cycles",
+                len(faults) * (self.cost.ptw_cycles
+                               + self.cost.post_fault_flush_cycles),
+            )
+        return horizon
+
+    def plan_decode(self) -> DecodePlan | None:
+        """One call per engine step: pick the horizon, fault in every page
+        it needs, and build the decode plan (what ``Engine.step`` drives)."""
+        k = self.grow_horizon(self.plan_horizon())
+        return self.decode_plan(k)
+
+    def decode_plan(self, horizon: int = 1) -> DecodePlan | None:
         if not self.running:
             return None  # everything got preempted this step
         b = self.cfg.max_batch
@@ -462,27 +546,50 @@ class Scheduler:
         tokens = np.zeros((b,) + np.shape(sample), np.int32)
         pre_lens = np.zeros((b,), np.int32)
         active = np.zeros((b,), bool)
+        steps_left = np.zeros((b,), np.int32)
         for req_id, r in self.running.items():
             slot = self.slot_of[req_id]
             tokens[slot] = r.output[-1]
             pre_lens[slot] = r.total_len - 1   # position of the new token
             active[slot] = True
-        return DecodePlan(tokens=tokens, pre_lens=pre_lens, active=active)
+            steps_left[slot] = min(horizon, self._steps_until_retire(r))
+        return DecodePlan(tokens=tokens, pre_lens=pre_lens, active=active,
+                          horizon=horizon, steps_left=steps_left)
 
-    def commit_decode(self, sampled: np.ndarray) -> None:
+    def commit_decode(self, sampled: np.ndarray, horizon: int = 1) -> None:
         """Append sampled tokens (indexed by slot), retire finished
-        requests."""
-        self.counters.inc("decode_tokens", len(self.running))
-        self.counters.inc("decode_translations", len(self.running))
-        for req_id in list(self.running):
-            r = self.running[req_id]
-            slot = self.slot_of[req_id]
-            r.output.append(np.asarray(sampled[slot]))
-            if len(r.output) >= r.max_new_tokens:
-                r.status = "done"
-                self.done[req_id] = r
-                del self.running[req_id]
-                del self.slot_of[req_id]
-                self.vmem.unmap_seq(req_id)
-                self.counters.inc("completed")
-                self.counters.snapshot("done", req_id)
+        requests.
+
+        ``horizon == 1``: ``sampled`` is the single-step ``[B, ...]`` slot
+        array.  ``horizon > 1``: ``sampled`` is the fused ``[K, B, ...]``
+        token block; it is committed step-major — inner step t for every
+        lane before step t+1 — so retirement order (and therefore the
+        slot/frame free order the allocator sees) matches a K=1 run
+        exactly.  A lane stops consuming the block the moment it retires;
+        later block rows for that slot are device scratch output.
+        """
+        block = sampled if horizon > 1 else [sampled]
+        for t in range(horizon):
+            if not self.running:
+                break
+            if t:
+                # the fused dispatch compressed K token-steps into one
+                # engine step; advance the scheduler's logical clock per
+                # inner step so step_i, the 100 Hz tick accounting and
+                # run() budgets stay in TOKEN-steps — identical to a K=1
+                # run of the same workload
+                self.begin_step()
+            self.counters.inc("decode_tokens", len(self.running))
+            self.counters.inc("decode_translations", len(self.running))
+            for req_id in list(self.running):
+                r = self.running[req_id]
+                slot = self.slot_of[req_id]
+                r.output.append(np.asarray(block[t][slot]))
+                if len(r.output) >= r.max_new_tokens:
+                    r.status = "done"
+                    self.done[req_id] = r
+                    del self.running[req_id]
+                    del self.slot_of[req_id]
+                    self.vmem.unmap_seq(req_id)
+                    self.counters.inc("completed")
+                    self.counters.snapshot("done", req_id)

@@ -229,6 +229,62 @@ class TestTraces:
 # ---------------------------------------------------------------------------
 
 
+class TestAppendTokensBatch:
+    """All-or-nothing multi-sequence growth (the fused decode horizon's
+    pre-fault path): either every sequence in the batch grows, or NONE
+    does — batch-wide precise-exception semantics."""
+
+    def mk(self, num_pages=12):
+        return VirtualMemory(VMemConfig(
+            page_size=4, num_pages=num_pages, max_pages_per_seq=8,
+            max_seqs=4))
+
+    def test_batch_matches_individual_appends(self):
+        vm = self.mk()
+        vm.map_seq(0, 4)
+        vm.map_seq(1, 6)
+        faults = vm.append_tokens_batch([(0, 8), (1, 2)])
+        # seq 0: 4 -> 12 tokens crosses into pages 1 and 2; seq 1: 6 -> 8
+        # fits its tail page
+        assert sorted((f.seq_id, f.logical_page) for f in faults) == [
+            (0, 1), (0, 2)]
+        assert vm.seq_len(0) == 12 and vm.seq_len(1) == 8
+        vm.check_invariants()
+
+    def test_all_or_nothing_on_pool_exhaustion(self):
+        vm = self.mk(num_pages=4)
+        vm.map_seq(0, 4)
+        vm.map_seq(1, 4)
+        # 2 frames free; the batch wants 2 + 2.  A sequential grow would
+        # have satisfied seq 0 before failing on seq 1 — the batch must
+        # leave BOTH untouched instead.
+        with pytest.raises(OutOfPagesError):
+            vm.append_tokens_batch([(0, 8), (1, 8)])
+        assert vm.seq_len(0) == 4 and vm.seq_len(1) == 4
+        assert len(vm.seq(0).pages) == 1 and len(vm.seq(1).pages) == 1
+        assert vm.pool.num_free == 2
+        assert vm.pool.fault_count == 0
+        vm.check_invariants()
+
+    def test_reach_violation_raises_before_any_mutation(self):
+        vm = self.mk()
+        vm.map_seq(0, 4)
+        vm.map_seq(1, 4)
+        # max_pages_per_seq=8, page 4 -> 32-token reach; 4 + 30 exceeds it
+        with pytest.raises(ValueError):
+            vm.append_tokens_batch([(0, 2), (1, 30)])
+        assert vm.seq_len(0) == 4 and vm.seq_len(1) == 4
+        vm.check_invariants()
+
+    def test_empty_and_zero_growth_are_noops(self):
+        vm = self.mk()
+        vm.map_seq(0, 4)
+        assert vm.append_tokens_batch([]) == []
+        assert vm.append_tokens_batch([(0, 0)]) == []
+        assert vm.seq_len(0) == 4
+        vm.check_invariants()
+
+
 class TestDrainDirtyRows:
     """The dirty set must be EXACT: every mutated row, only mutated rows,
     and empty after a drain — the serving executor applies these deltas to

@@ -1,0 +1,230 @@
+"""Fused multi-step decode horizon acceptance tests.
+
+The tentpole contract of the horizon (engine docstring, "Fused multi-step
+decode"): the Scheduler computes a safe horizon K, pre-faults every page K
+chained decode steps will touch in ONE batched allocation, and the
+Executor runs those K steps in a single dispatch with on-device sampling
+and per-lane retire masking.  Three things must hold:
+
+  1. IDENTITY — greedy outputs are token-for-token identical to the frozen
+     seed engine for forced horizons K in {1, 2, 4, 8} AND for auto-horizon
+     runs that mix preemption, forked admission and restore mid-stream
+     (the horizon must collapse to 1 under pressure and re-open afterwards
+     without drift).  Temperature sampling is identical too: the fused
+     path threads the PRNG key with exactly one split per inner step, the
+     same stream the host path consumes.
+  2. AMORTIZATION — ``host_syncs`` (forced device->host transfers) per
+     decoded token drops strictly below 1.0, and dispatches drop below
+     token-steps (``decode_horizon > decode_dispatches`` proves fused
+     dispatches actually ran).
+  3. PROPERTY — identity holds across page_size x max_new draws
+     (``tests/_prop_fallback.py`` shim when hypothesis is absent).
+"""
+
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
+    from _prop_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import Engine, ReferenceEngine, Request, ServeConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    return cfg, model, model.init(KEY)
+
+
+def workload(cfg, lens_new_fork, seed=29, prefix_len=0):
+    rng = np.random.default_rng(seed)
+    prefix = (rng.integers(0, cfg.vocab_size, size=prefix_len)
+              .astype(np.int32) if prefix_len else None)
+    reqs = [
+        Request(req_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=int(l))
+                .astype(np.int32),
+                max_new_tokens=m, share_prefix=f)
+        for i, (l, m, f) in enumerate(lens_new_fork)
+    ]
+    return prefix, reqs
+
+
+def run_engine(eng_cls, model, params, serve_cfg, reqs, prefix=None):
+    eng = eng_cls(model, params, serve_cfg)
+    if prefix is not None:
+        eng.preload_prefix(prefix)
+    for r in reqs:
+        eng.submit(copy.deepcopy(r))
+    done = eng.run()
+    return eng, done
+
+
+def outputs(done):
+    return {i: [int(x) for x in done[i].output] for i in done}
+
+
+class TestForcedHorizonIdentity:
+    @pytest.mark.parametrize("k", [1, 2, 4, 8])
+    def test_token_identical_to_seed(self, model_and_params, k):
+        """Roomy pool, batch admitted in one step (queue drains instantly)
+        so the horizon engages immediately — every forced cap must
+        reproduce the seed engine exactly."""
+        cfg, model, params = model_and_params
+        _, reqs = workload(cfg, [(5, 12, False), (9, 12, False),
+                                 (7, 12, False)], seed=7)
+        serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                max_pages_per_seq=32, max_batch=3,
+                                max_horizon=k)
+        new_eng, done_n = run_engine(Engine, model, params, serve_cfg, reqs)
+        ref_eng, done_r = run_engine(
+            ReferenceEngine, model, params, serve_cfg, reqs)
+        assert outputs(done_n) == outputs(done_r)
+        c = new_eng.counters
+        assert c.get("decode_horizon") == c.get("decode_tokens") // 3
+        if k > 1:
+            # fused dispatches actually ran: fewer dispatches than
+            # token-steps, and no single dispatch exceeded the cap
+            assert c.get("decode_dispatches") < c.get("decode_horizon")
+            assert c.get("decode_horizon") <= k * c.get("decode_dispatches")
+        else:
+            assert c.get("decode_dispatches") == c.get("decode_horizon")
+        new_eng.vmem.check_invariants()
+
+
+class TestAutoHorizonIdentity:
+    def test_mixed_preempt_fork_restore_collapses_and_reopens(
+            self, model_and_params):
+        """Tight pool + shared prefix: forked admissions, preemptions and
+        restores all fire mid-stream, including at least one POOL-pressure
+        horizon collapse (not just event collapses) — and the horizon
+        re-opens afterwards (decode_horizon > decode_dispatches) with
+        outputs still token-identical to the seed."""
+        cfg, model, params = model_and_params
+        prefix, reqs = workload(
+            cfg,
+            [(5, 16, True), (9, 16, False), (7, 16, True),
+             (11, 16, False), (6, 16, True)],
+            seed=29, prefix_len=10,
+        )
+        serve_cfg = ServeConfig(page_size=4, num_pages=15,
+                                max_pages_per_seq=16, max_batch=3)
+        new_eng, done_n = run_engine(Engine, model, params, serve_cfg, reqs,
+                                     prefix=prefix)
+        ref_eng, done_r = run_engine(ReferenceEngine, model, params,
+                                     serve_cfg, reqs, prefix=prefix)
+        c = new_eng.counters
+        # the workload must actually exercise every horizon hazard
+        assert c.get("preemptions") > 0
+        assert c.get("restores") > 0
+        assert c.get("forked_admissions") > 0
+        assert c.get("horizon_collapses") > 0          # pool pressure hit
+        assert c.get("decode_horizon") > c.get("decode_dispatches")  # reopened
+        # identical policy decisions and token-for-token identical outputs
+        for name in ("preemptions", "restores", "page_faults", "completed"):
+            assert c.get(name) == ref_eng.counters.get(name), name
+        assert outputs(done_n) == outputs(done_r)
+        new_eng.vmem.check_invariants()
+
+    def test_scheduler_clock_stays_in_token_steps(self, model_and_params):
+        """A fused run and a K=1 run of the same workload must read the
+        same scheduler time: step_i, ticks and tick cycle accounting are
+        per TOKEN-step, not per dispatch."""
+        cfg, model, params = model_and_params
+        _, reqs = workload(cfg, [(5, 10, False), (8, 10, False)], seed=11)
+        clocks = {}
+        for mh in (1, 8):
+            serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                    max_pages_per_seq=16, max_batch=2,
+                                    max_horizon=mh, tick_every_steps=2)
+            eng, _ = run_engine(Engine, model, params, serve_cfg, reqs)
+            clocks[mh] = (eng.scheduler.step_i,
+                          eng.counters.get("ticks"),
+                          eng.counters.get("modeled_tick_cycles"))
+        assert clocks[1] == clocks[8]
+
+
+class TestOnDeviceSampling:
+    def test_temperature_stream_identical_to_stepwise(self, model_and_params):
+        """The fused path splits the PRNG key once per inner step — the
+        exact stream the host sampling path consumes — so stochastic
+        outputs match a K=1 run bit-for-bit."""
+        cfg, model, params = model_and_params
+        _, reqs = workload(cfg, [(5, 12, False), (9, 12, False),
+                                 (7, 12, False)], seed=7)
+        outs = {}
+        for mh in (1, 8):
+            serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                    max_pages_per_seq=32, max_batch=3,
+                                    max_horizon=mh, greedy=False,
+                                    temperature=0.8, seed=3)
+            eng, done = run_engine(Engine, model, params, serve_cfg, reqs)
+            outs[mh] = outputs(done)
+        assert outs[1] == outs[8]
+
+
+class TestAmortization:
+    def test_host_syncs_per_token_below_one(self, model_and_params):
+        """The acceptance gate's counter contract: at auto-horizon the
+        scalar plane intervenes less than once per decoded token, and
+        strictly less often than the forced-K=1 engine."""
+        cfg, model, params = model_and_params
+        _, reqs = workload(cfg, [(5, 12, False), (9, 12, False),
+                                 (7, 12, False)], seed=7)
+        syncs = {}
+        for mh in (1, 8):
+            serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                    max_pages_per_seq=32, max_batch=3,
+                                    max_horizon=mh)
+            eng, done = run_engine(Engine, model, params, serve_cfg, reqs)
+            c = eng.counters
+            assert c.get("decode_tokens") == 3 * 11
+            syncs[mh] = c.get("host_syncs")
+            assert c.ratio("host_syncs", "decode_tokens") < 1.0
+        assert syncs[8] < syncs[1]
+
+    def test_ptab_sync_once_per_horizon(self, model_and_params):
+        """Horizon growth batches all page faults before the dispatch, so
+        page-table delta syncs scale with dispatches, not token-steps."""
+        cfg, model, params = model_and_params
+        _, reqs = workload(cfg, [(5, 12, False), (9, 12, False),
+                                 (7, 12, False)], seed=7)
+        serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                max_pages_per_seq=32, max_batch=3)
+        eng, _ = run_engine(Engine, model, params, serve_cfg, reqs)
+        c = eng.counters
+        # one sync opportunity per dispatch + one per prefill batch
+        assert c.get("ptab_syncs") <= c.get("decode_dispatches") + 1
+        assert c.get("decode_dispatches") < c.get("decode_tokens") // 3
+
+
+@settings(max_examples=5, deadline=None)
+@given(page_size=st.sampled_from([2, 4, 8]),
+       max_new=st.integers(min_value=1, max_value=10))
+def test_horizon_identity_property(model_and_params, page_size, max_new):
+    """Property: fused auto-horizon == forced K=1, across page geometry and
+    request lifetime (covers the retire-mid-horizon edge at max_new == 1,
+    where a satisfied lane still decodes exactly once — seed semantics)."""
+    cfg, model, params = model_and_params
+    _, reqs = workload(cfg, [(5, max_new, False), (7, max_new, False)],
+                       seed=1000 + 31 * page_size + max_new)
+    outs = {}
+    for mh in (1, 8):
+        serve_cfg = ServeConfig(page_size=page_size, num_pages=64,
+                                max_pages_per_seq=32, max_batch=2,
+                                max_horizon=mh)
+        eng, done = run_engine(Engine, model, params, serve_cfg, reqs)
+        outs[mh] = outputs(done)
+        eng.vmem.check_invariants()
+    assert outs[1] == outs[8]

@@ -188,9 +188,14 @@ class TestRestoreLivelock:
 
 class TestHotPathContracts:
     def test_page_table_uploads_are_delta_only(self, model_and_params):
+        # max_horizon=1: this asserts the PR-1 delta-sync contract against
+        # the seed's per-STEP full upload, so the step count must mean one
+        # token per lane (the fused horizon's per-token sync amortization
+        # has its own coverage in test_decode_horizon.py)
         cfg, model, params = model_and_params
         serve_cfg = ServeConfig(page_size=4, num_pages=256,
-                                max_pages_per_seq=16, max_batch=4)
+                                max_pages_per_seq=16, max_batch=4,
+                                max_horizon=1)
         reqs = mixed_workload(cfg, n=4, seed=5, max_new=16)
         eng, done = run_engine(Engine, model, params, serve_cfg, reqs)
         assert len(done) == 4

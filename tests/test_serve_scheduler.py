@@ -6,6 +6,8 @@ bookkeeping — so admission order, victim policy, preemption/restore
 bookkeeping and fork accounting are tested without touching a single
 device array."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -356,6 +358,113 @@ class TestReachChecks:
         assert sched.counters.get("failed_unreachable") == 0
         assert all(r.status == "done" for r in sched.done.values())
         assert len(sched.done) == 16
+        sched.vmem.check_invariants()
+
+
+class TestHorizonPlanning:
+    """Fused-decode horizon policy: pure host arithmetic, no device.
+
+    ``plan_horizon`` may only open a K>1 horizon when no scheduler event
+    can become due mid-horizon; ``grow_horizon`` pre-faults every page the
+    horizon touches in one all-or-nothing batch and collapses to 1 (exact
+    pre-horizon behavior) under pool pressure."""
+
+    def _start(self, sched, reqs):
+        for r in reqs:
+            sched.submit(r)
+        admitted = sched.admit()
+        sched.finish_prefill(admitted, [np.int32(0)] * len(admitted))
+        return admitted
+
+    def test_collapses_on_pending_admission(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, max_new=12), req(1, max_new=12),
+                            req(2, max_new=12)])
+        assert list(sched.queue)               # req 2 waits behind the batch
+        assert sched.plan_horizon() == 1
+
+    def test_collapses_on_pending_restore(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, max_new=12), req(1, max_new=12)])
+        sched.spill(sched.running[1])
+        assert sched.plan_horizon() == 1
+
+    def test_caps_at_longest_lane_rounded_to_pow2(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, max_new=4), req(1, max_new=12)])
+        # remaining after prefill: 3 and 11 -> min(cap=8, max=11) = 8
+        assert sched.plan_horizon() == 8
+        sched2, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched2, [req(0, max_new=4), req(1, max_new=4)])
+        # longest lane has 3 steps left -> floor to 2
+        assert sched2.plan_horizon() == 2
+
+    def test_disabled_by_config(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        sched.cfg = dataclasses.replace(sched.cfg, max_horizon=1)
+        self._start(sched, [req(0, max_new=12)])
+        assert sched.plan_horizon() == 1
+
+    def test_grow_horizon_prefaults_every_page_in_one_batch(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, plen=4, max_new=12)])
+        # total_len 5, seq_len 4; K=8 -> mapped target 5+8-1 = 12 tokens
+        k = sched.grow_horizon(sched.plan_horizon())
+        assert k == 8
+        assert sched.vmem.seq_len(0) == 12
+        assert sched.counters.get("page_faults") == 2   # pages 1 and 2
+        plan = sched.decode_plan(k)
+        assert plan.horizon == 8
+        assert plan.steps_left[sched.slot_of[0]] == 8
+        sched.vmem.check_invariants()
+
+    def test_grow_horizon_collapses_under_pool_pressure(self):
+        sched, _ = mk_sched(usable_pages=4, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, plen=4, max_new=12),
+                            req(1, plen=4, max_new=12)])
+        # K=8 wants 2+2 more frames but only 2 are free: all-or-nothing
+        # growth refuses, the horizon collapses to the exact per-step
+        # path (each lane faults one page; nothing was half-grown)
+        assert sched.grow_horizon(8) == 1
+        assert sched.counters.get("horizon_collapses") == 1
+        assert sched.vmem.seq_len(0) == 5 and sched.vmem.seq_len(1) == 5
+        assert sched.counters.get("page_faults") == 2
+        sched.vmem.check_invariants()
+
+    def test_retiring_lane_grows_one_token_short(self):
+        """A lane retiring inside the horizon never maps its FINAL sampled
+        token (it retires inside commit_decode) — the -1 in the growth
+        target, mirroring the admission reach-check arithmetic."""
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, plen=4, max_new=3),
+                            req(1, plen=4, max_new=12)])
+        k = sched.grow_horizon(sched.plan_horizon())
+        assert k == 8
+        # lane 0 participates for its 2 remaining steps only: mapped target
+        # total_len(5) + 2 - 1 = 6, not 5 + 8 - 1
+        assert sched.vmem.seq_len(0) == 6
+        assert sched.vmem.seq_len(1) == 12
+        plan = sched.decode_plan(k)
+        assert plan.steps_left[sched.slot_of[0]] == 2
+        assert plan.steps_left[sched.slot_of[1]] == 8
+
+    def test_commit_block_step_major_retires_mid_horizon(self):
+        sched, _ = mk_sched(usable_pages=30, max_pages=16, max_batch=2)
+        self._start(sched, [req(0, plen=4, max_new=2),
+                            req(1, plen=4, max_new=4)])
+        k = sched.grow_horizon(sched.plan_horizon())
+        assert k == 2                          # longest lane has 3 left -> 2
+        slot0, slot1 = sched.slot_of[0], sched.slot_of[1]
+        block = np.arange(2 * sched.cfg.max_batch,
+                          dtype=np.int32).reshape(2, -1)
+        sched.commit_decode(block, horizon=2)
+        # lane 0 retired after inner step 0; its t=1 row was ignored
+        assert sched.done[0].status == "done"
+        assert [int(x) for x in sched.done[0].output[1:]] == [block[0][slot0]]
+        assert [int(x) for x in sched.running[1].output[1:]] == [
+            block[0][slot1], block[1][slot1]]
+        # step-major accounting: 2 lanes at t=0, 1 lane at t=1
+        assert sched.counters.get("decode_tokens") == 3
         sched.vmem.check_invariants()
 
 

@@ -1,0 +1,121 @@
+"""Sharded executor over the ('kv', 'hd') serve mesh: single-device parity.
+
+Runs the SAME decode-horizon workload through the split engine twice —
+default single-device placement vs the executor's mesh mode
+(``launch.mesh.make_host_serve_mesh``: KV pools sharded jointly over KV
+heads and head_dim, page table + scalar-plane operands replicated) — and
+reports:
+
+  * token identity (greedy, auto horizon): the sharded data plane must
+    reproduce the single-device token stream on a preempt/restore
+    workload — the executor-level invariant the sharded refactor is
+    gated on;
+  * the amortization counters per decoded token (host syncs, page-table
+    delta syncs) and the mean fused horizon — these must not change under
+    sharding, because every one of them is a *scheduler* event and the
+    scheduler is untouched (that was the point of the PR 1 split);
+  * decode tok/s on both placements — informational only on CPU-forced
+    host devices, where per-device collectives are emulation, not speed.
+
+With a single visible device the mesh degrades to 1x1 — the sharded code
+path (explicit in/out shardings, donated pools) still runs, which is what
+the fast CI job exercises; the ``multidevice`` job forces 8 host devices
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+# same workload generator, driver and jit-cache warmer as the seed-vs-split
+# benchmark: _warm walks the whole power-of-two horizon ladder (max_new=12
+# AND 6) so no fused-decode graph compiles inside the timed region
+from benchmarks.bench_serve_throughput import _drive, _warm, _workload
+
+
+def run() -> tuple[list[str], dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_serve_mesh
+    from repro.models import build_model
+    from repro.serve import Engine, ServeConfig
+
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_host_serve_mesh(cfg.num_kv_heads, cfg.head_dim)
+    print(f"serve mesh {dict(mesh.shape)}: {mesh.size} of "
+          f"{jax.device_count()} visible devices")
+
+    # tight pool -> admission queuing, preemption and restore all fire
+    # while the horizon opens and collapses; the stress identity workload
+    serve_cfg = ServeConfig(page_size=4, num_pages=16, max_pages_per_seq=16,
+                            max_batch=3)
+    reqs = _workload(cfg)
+    results = {}
+    outs = {}
+    for name, kw in (("single", {}), ("sharded", {"mesh": mesh})):
+        eng_cls = functools.partial(Engine, **kw)
+        _warm(eng_cls, model, params, cfg, serve_cfg)
+        eng = eng_cls(model, params, serve_cfg)
+        done, wall = _drive(eng, reqs)
+        eng.executor.check_sharding_invariants()
+        outs[name] = {i: [int(x) for x in done[i].output] for i in done}
+        c = eng.counters
+        toks = c.get("decode_tokens")
+        results[name] = dict(
+            wall=wall,
+            decode_tok_per_s=toks / max(c.seconds("decode"), 1e-9),
+            host_syncs_per_tok=c.ratio("host_syncs", "decode_tokens"),
+            ptab_syncs_per_tok=c.ratio("ptab_syncs", "decode_tokens"),
+            mean_horizon=(c.get("decode_horizon")
+                          / max(c.get("decode_dispatches"), 1)),
+            preemptions=c.get("preemptions"),
+            restores=c.get("restores"),
+        )
+        r = results[name]
+        print(f"{name:>8}: {r['decode_tok_per_s']:.1f} decode tok/s, "
+              f"{r['host_syncs_per_tok']:.3f} host syncs/tok, "
+              f"{r['ptab_syncs_per_tok']:.3f} ptab syncs/tok, "
+              f"mean horizon {r['mean_horizon']:.2f}, "
+              f"{r['preemptions']} preemptions / {r['restores']} restores")
+
+    token_identical = outs["single"] == outs["sharded"]
+    counters_identical = all(
+        results["single"][k] == results["sharded"][k]
+        for k in ("host_syncs_per_tok", "ptab_syncs_per_tok", "mean_horizon",
+                  "preemptions", "restores")
+    )
+    print(f"sharded outputs token-identical to single-device: "
+          f"{token_identical}; scheduler counters identical: "
+          f"{counters_identical}")
+
+    metrics = {
+        "mesh_devices": int(mesh.size),
+        "visible_devices": int(jax.device_count()),
+        "token_identical": bool(token_identical),
+        "counters_identical": bool(counters_identical),
+        "single": results["single"],
+        "sharded": results["sharded"],
+    }
+    csv = [
+        f"serve_sharded_mesh_devices,0,{mesh.size}",
+        f"serve_sharded_token_identical,0,{int(token_identical)}",
+        f"serve_sharded_decode_tok_per_s,0,"
+        f"{results['sharded']['decode_tok_per_s']:.2f}",
+        f"serve_sharded_host_syncs_per_tok,0,"
+        f"{results['sharded']['host_syncs_per_tok']:.4f}",
+        f"serve_sharded_ptab_syncs_per_tok,0,"
+        f"{results['sharded']['ptab_syncs_per_tok']:.4f}",
+    ]
+    return csv, metrics
+
+
+def main() -> list[str]:
+    csv, _ = run()
+    return csv
+
+
+if __name__ == "__main__":
+    main()

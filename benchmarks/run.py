@@ -1,27 +1,41 @@
 """Benchmark harness: one section per paper table/figure + the roofline.
 
+Invoke as ``python -m benchmarks.run`` from the repo root (the package
+import form; plain ``python benchmarks/run.py`` also works via the
+``__main__`` sys.path guard at the bottom of this file).
+
 Prints a ``name,us_per_call,derived`` CSV block at the end (harness
 contract).  Sections (select a subset with ``--only``):
   fig2     — matmul VM overhead vs DTLB size x problem size (bench_tlb_sweep)
   table1   — RiVEC suite scalar vs vector speedups           (bench_rivec)
   s31      — scheduler ticks + context switches              (bench_context_switch)
   serve    — seed vs Scheduler/Executor serving split        (bench_serve_throughput)
+  sharded  — executor over the ('kv','hd') serve mesh        (bench_serve_sharded)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-Two sections double as CI gates when explicitly selected:
+Three sections double as CI gates when explicitly selected:
   * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
     gathers at least as many bytes as the gathered-pages reference path;
   * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
     token-identical to the seed engine AND host syncs per decoded token
     are strictly below 1.0 AND the mean fused horizon exceeds 1.0 (batched
     K=1 decode already syncs less than once per token, so the sync ratio
-    alone cannot detect the horizon silently regressing to K=1).
+    alone cannot detect the horizon silently regressing to K=1);
+  * ``--only sharded`` exits nonzero unless the mesh-sharded executor is
+    token-identical to the single-device executor AND the scheduler
+    counters (host/ptab syncs per token, mean horizon, preemptions,
+    restores) are unchanged — sharding the data plane must be invisible
+    to the policy plane.  Multi-device coverage needs
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+    ``multidevice`` job); with one device the mesh degrades to 1x1 and
+    the gate still checks the sharded code path.
 
 The serve section also appends its metrics to ``BENCH_serve.json`` at the
-repo root — the machine-readable perf trajectory across PRs.
+repo root — the machine-readable perf trajectory across PRs, which
+``scripts/bench_regress.py`` gates on (counters only, never tok/s).
 """
 
 from __future__ import annotations
@@ -103,6 +117,25 @@ def _serve(gate: bool = False):
     return csv
 
 
+def _sharded(gate: bool = False):
+    from benchmarks import bench_serve_sharded
+    csv, metrics = bench_serve_sharded.run()
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append(
+            f"sharded executor ({metrics['mesh_devices']} mesh devices) "
+            "diverged from the single-device token stream")
+    if not metrics["counters_identical"]:
+        failures.append(
+            "scheduler counters changed under sharding — the data-plane "
+            "layout leaked into policy decisions")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only sharded: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -136,6 +169,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("s31", "§3.1: scheduler interrupts + context switches", _s31),
     ("serve", "Serving split: seed vs Scheduler/Executor (decode + switches)",
      _serve),
+    ("sharded",
+     "Sharded executor over the ('kv','hd') serve mesh vs single-device",
+     _sharded),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -159,7 +195,7 @@ def main(argv: list[str] | None = None) -> None:
         if args.only is not None and key not in args.only:
             continue
         section(title)
-        if key in ("prefill", "serve"):
+        if key in ("prefill", "serve", "sharded"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)
@@ -171,4 +207,14 @@ def main(argv: list[str] | None = None) -> None:
 
 
 if __name__ == "__main__":
+    if __package__ in (None, ""):
+        # `python benchmarks/run.py`: the script's own directory is on
+        # sys.path but the repo root is not, so the `from benchmarks
+        # import ...` inside each section would fail with a confusing
+        # ModuleNotFoundError.  Put the repo root (and src/, for `repro`
+        # itself when PYTHONPATH is unset) first so both invocation forms
+        # work (`python -m benchmarks.run` is the canonical one).
+        _root = pathlib.Path(__file__).resolve().parent.parent
+        sys.path.insert(0, str(_root / "src"))
+        sys.path.insert(0, str(_root))
     main()

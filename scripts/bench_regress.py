@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Serve-perf regression gate over the ``BENCH_serve.json`` trajectory.
+
+Compares the NEWEST entry (appended by the ``benchmarks/run.py --only
+serve`` gate that just ran) against the PREVIOUS one on *deterministic
+counters only*:
+
+  * ``host_syncs_per_token``  — forced device->host transfers per decoded
+    token (lower is better; the fused horizon's amortization contract);
+  * ``ptab_syncs_per_token``  — page-table delta uploads per decoded token
+    (lower is better; the delta-only satp contract);
+  * ``mean_horizon``          — mean fused decode horizon K (higher is
+    better; detects the horizon silently collapsing).
+
+Never wall-clock tok/s: on shared CI/dev CPUs those swing up to 5x between
+runs, while the counters are exact scheduler/executor event counts — same
+code + same workload = same values, so any drift is a code change, not
+noise.  The tiny relative slack below only forgives float formatting, not
+behavior.
+
+Exit status: 0 when there is nothing to compare (missing file, fewer than
+two entries) or no counter regressed; 1 on regression, with one line per
+offending counter.  Usage: ``python scripts/bench_regress.py [path]``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
+
+#: (name, extractor, direction): "le" = new must stay <= prev, "ge" = >=
+CHECKS = (
+    ("host_syncs_per_token",
+     lambda m: float(m["host_syncs_per_token"]), "le"),
+    ("ptab_syncs_per_token",
+     lambda m: float(m["sweep"]["auto"]["ptab_syncs_per_tok"]), "le"),
+    ("mean_horizon",
+     lambda m: float(m["mean_horizon"]), "ge"),
+)
+
+
+def compare(prev: dict, new: dict) -> list[str]:
+    """Regression messages comparing two metric records (empty = pass)."""
+    failures = []
+    for name, extract, direction in CHECKS:
+        try:
+            p, n = extract(prev), extract(new)
+        except (KeyError, TypeError):
+            # an older record predates this counter — nothing to gate on
+            continue
+        if direction == "le" and n > p * (1 + REL_SLACK) + 1e-12:
+            failures.append(
+                f"{name} regressed: {p:.6f} -> {n:.6f} (must not increase)")
+        elif direction == "ge" and n < p * (1 - REL_SLACK) - 1e-12:
+            failures.append(
+                f"{name} regressed: {p:.6f} -> {n:.6f} (must not decrease)")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[1]) if len(argv) > 1 else (
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+    )
+    if not path.exists():
+        print(f"bench_regress: {path} missing — nothing to compare")
+        return 0
+    history = json.loads(path.read_text())
+    if not isinstance(history, list) or len(history) < 2:
+        print(f"bench_regress: {path.name} has "
+              f"{len(history) if isinstance(history, list) else '?'} "
+              "record(s) — need two to compare")
+        return 0
+    prev, new = history[-2], history[-1]
+    failures = compare(prev["metrics"], new["metrics"])
+    for f in failures:
+        print(f"FAIL: {f}")
+    if not failures:
+        print(f"bench_regress: counters OK ({prev['t']} -> {new['t']})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

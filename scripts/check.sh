@@ -2,16 +2,34 @@
 # Tier-1 verification without the multi-minute sharding subprocesses:
 #   1. byte-compile the whole tree (catches syntax/indent errors fast);
 #   2. import the package surface (catches broken module wiring);
-#   3. run the `fast` pytest subset (everything not marked `slow`).
+#   3. run the kernel differential grid, then the `fast` pytest subset;
+#   4. serve gate (`benchmarks/run.py --only serve`) + the counter-based
+#      regression gate (`scripts/bench_regress.py` over BENCH_serve.json);
+#   5. IF >1 host device is advertised: the `sharded` pytest subset and
+#      the sharded-executor parity gate.
 # The full gate (including sharding dry-runs) stays:
 #   PYTHONPATH=src python -m pytest -q
+#
+# Running under CI / forcing host devices:
+#   This script is what the CI `fast` job runs verbatim (see
+#   .github/workflows/ci.yml; PYTHONPATH=src is set once at the workflow
+#   level, and exporting it below keeps local runs identical).  The
+#   `multidevice` job additionally sets
+#       XLA_FLAGS=--xla_force_host_platform_device_count=8
+#   which makes one CPU process present 8 XLA host devices — enough to lay
+#   the executor's KV pools out over a real ('kv','hd') serve mesh with
+#   cross-device collectives, with no accelerator anywhere.  Stage 5 below
+#   keys off that flag, so plain single-device local runs stay fast and a
+#   flagged run (local or CI) gets the sharded coverage automatically.
+#   Reproduce the CI multidevice job locally with:
+#       XLA_FLAGS=--xla_force_host_platform_device_count=8 scripts/check.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== byte-compile"
-python -m compileall -q src benchmarks examples tests
+python -m compileall -q src benchmarks examples tests scripts
 
 echo "== import surface"
 python - <<'PY'
@@ -24,7 +42,28 @@ echo "== kernel differential grids (fail fast on kernel regressions)"
 python -m pytest -q -m kernels "$@"
 
 echo "== fast tests"
-python -m pytest -q -m "fast and not kernels" "$@"
+python -m pytest -q -m "fast and not kernels and not sharded" "$@"
 
 echo "== serve gate (fused decode horizon must amortize host syncs)"
 python -m benchmarks.run --only serve
+
+echo "== serve counter regression gate (BENCH_serve.json trajectory)"
+python scripts/bench_regress.py
+
+# sharded stage: only when this environment actually presents >1 XLA
+# device (forced host devices via XLA_FLAGS, or real accelerators) —
+# single-device runs skip it fast.  The probe is a subprocess so the jax
+# device count it locks in dies with it.
+ndev=$(python - <<'PY'
+import jax
+print(jax.device_count())
+PY
+)
+if [ "$ndev" -gt 1 ]; then
+  echo "== sharded serving tests ($ndev XLA devices)"
+  python -m pytest -q -m sharded "$@"
+  echo "== sharded executor parity gate"
+  python -m benchmarks.run --only sharded
+else
+  echo "== sharded stage skipped (single host device; set XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+fi

@@ -5,6 +5,16 @@ These handle shape padding to block multiples, block-size selection, and
 rest of the framework never deals with tiling details.  Every wrapper
 dispatches to the Pallas kernel (``use_kernel=True``, default) or the pure
 jnp oracle (``use_kernel=False`` — the XLA-native path used by dry-runs).
+
+The Pallas kernels assume a single device's pool view (scalar-prefetched
+page tables index local frames; no partitioning annotations), so they must
+not be traced into a computation laid out over a >1-device mesh.  That
+guard lives where the mesh does: the sharded serving executor swaps in a
+ref-path twin of its model (``serve.executor._ref_path_model``) so every
+wrapper here receives ``use_kernel=False`` under a multi-device mesh and
+GSPMD partitions the jnp paths freely — while single-device callers (the
+kernel differential grids, engines without a mesh) keep the kernel paths
+live regardless of how many devices the process can see.
 """
 
 from __future__ import annotations

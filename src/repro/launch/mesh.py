@@ -85,6 +85,44 @@ def make_serve_mesh(
     return _mk(shape, axes)
 
 
+def make_host_serve_mesh(
+    num_kv_heads: int, head_dim: int, num_devices: int | None = None,
+) -> jax.sharding.Mesh:
+    """('kv', 'hd') serving mesh over the *locally visible* devices.
+
+    The executor-facing dual of :func:`make_serve_mesh`: same logical
+    factorization of the model axis into a 2-D (kv x hd) tile, but sized
+    to whatever this process can see — 8 forced host devices under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI, a TPU
+    slice in production, 1 CPU device in plain local runs (a 1x1 mesh:
+    the sharded code path with replicated layouts).
+
+    Picks the factorization using the MOST devices such that ``kv``
+    divides ``num_kv_heads`` and ``hd`` divides ``head_dim`` (ties prefer
+    the kv axis — head-parallel attention needs no cross-device
+    reductions, so it tracks the single-device float stream closest);
+    devices beyond ``kv * hd`` are simply left out of the mesh.
+    ``num_devices`` caps the search (clamped to what is visible).
+    """
+    visible = len(jax.devices())
+    n = min(num_devices, visible) if num_devices is not None else visible
+    if n < 1:
+        raise ValueError("need at least one device")
+    best: tuple[int, int] | None = None
+    for size in range(n, 0, -1):
+        for kv in range(min(size, num_kv_heads), 0, -1):
+            if size % kv or num_kv_heads % kv:
+                continue
+            hd = size // kv
+            if head_dim % hd == 0:
+                best = (kv, hd)
+                break
+        if best is not None:
+            break
+    kv, hd = best  # (1, 1) always factors, so best is never None
+    return _mk((kv, hd), ("kv", "hd"))
+
+
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh: ('pod', 'data') or ('data',)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -35,6 +35,13 @@ def main() -> None:
                     help="fused decode horizon cap: up to K chained decode "
                          "steps per dispatch with on-device sampling "
                          "(1 disables fusion)")
+    ap.add_argument("--serve-mesh", default="off",
+                    help="shard the executor's KV pools over a ('kv','hd') "
+                         "serve mesh: 'auto' factors all visible devices "
+                         "(force some on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8), an "
+                         "integer caps the device count, 'off' (default) "
+                         "keeps single-device placement")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -45,6 +52,14 @@ def main() -> None:
         )
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(args.seed))
+    mesh = None
+    if args.serve_mesh != "off":
+        from repro.launch.mesh import make_host_serve_mesh
+        n_dev = None if args.serve_mesh == "auto" else int(args.serve_mesh)
+        mesh = make_host_serve_mesh(cfg.num_kv_heads, cfg.head_dim, n_dev)
+        print(f"serve mesh: {dict(mesh.shape)} over {mesh.size} of "
+              f"{jax.device_count()} visible devices (KV pools sharded, "
+              "page table replicated)")
     eng = Engine(model, params, ServeConfig(
         page_size=args.page_size, num_pages=args.num_pages,
         max_pages_per_seq=max(
@@ -53,7 +68,7 @@ def main() -> None:
         ),
         max_batch=args.max_batch,
         max_horizon=args.max_horizon,
-    ))
+    ), mesh=mesh)
     rng = np.random.default_rng(args.seed)
     share = args.prefix_len > 0
     if share:

@@ -192,6 +192,30 @@ def _ns(mesh, *spec):
     return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
 
 
+def executor_state_shardings(mesh, num_kv_heads: int, head_dim: int) -> dict:
+    """Serving-view shardings for the :class:`repro.serve.executor.Executor`'s
+    persistent device state on a ('kv', 'hd') mesh.
+
+    The executor's pools are ``[L, P, page, Hkv, hd]`` (no leading serve
+    group: one engine = one replica; multi-replica is the scheduler's seam,
+    see ROADMAP).  They shard jointly over (kv, hd) exactly like the
+    dry-run serving view above — each axis degrades to replicated when its
+    dim does not divide the mesh extent — while the page table, token /
+    position operands and sampled-token outputs replicate: they are the
+    satp analogue every shard must read coherently.
+    """
+    def ok(dim: int, ax: str):
+        if ax not in mesh.axis_names or dim % mesh.shape[ax]:
+            return None
+        return ax
+
+    return {
+        "pool": _ns(mesh, None, None, None, ok(num_kv_heads, "kv"),
+                    ok(head_dim, "hd")),
+        "replicated": _ns(mesh),
+    }
+
+
 def build_serve_case(arch: str, shape_name: str, mesh,
                      serve_mode: str = "2d",
                      variant: str | None = None) -> DryRunCase:

@@ -75,7 +75,11 @@ class Engine:
     """Continuous batching over a paged-KV transformer (Scheduler+Executor)."""
 
     def __init__(self, model: TransformerLM, params: Any, cfg: ServeConfig,
-                 cost: CostModel | None = None):
+                 cost: CostModel | None = None, mesh=None):
+        """``mesh``: optional ('kv', 'hd') serve mesh
+        (:func:`repro.launch.mesh.make_host_serve_mesh`).  Only the
+        Executor's device state shards over it; the Scheduler is pure host
+        policy and needs no changes — that was the point of the split."""
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -91,7 +95,7 @@ class Engine:
         ))
         self.scheduler = Scheduler(cfg, self.vmem, self.cost, self.counters)
         self.executor = Executor(model, params, cfg, self.vmem, self.cost,
-                                 self.counters)
+                                 self.counters, mesh=mesh)
         self.scheduler.attach_plane(self.executor)
 
     # ------------------------------------------------------------------

@@ -21,7 +21,14 @@ spill/restore.  Here:
     temperature/categorical with a threaded PRNG key) and per-lane retire
     masking, so the host round-trip — and the page-table delta sync — is
     paid once per horizon, not once per token (``host_syncs`` /
-    ``decode_horizon`` counters).
+    ``decode_horizon`` counters);
+  * with a ('kv', 'hd') serve mesh the whole device state SHARDS: KV
+    pools partition jointly over KV heads and head_dim
+    (``launch.specs.executor_state_shardings``), the page table and every
+    scalar-plane operand replicate, and all jitted dispatches carry
+    explicit ``in_shardings``/``out_shardings`` with donated pools so the
+    fused decode horizon runs sharded for free — the Ara2 analogue of
+    scaling lanes/cores under one shared, coherent translation structure.
 
 The executor implements the scheduler's :class:`~repro.serve.scheduler.
 DataPlane` protocol; it makes no policy decisions.
@@ -48,19 +55,23 @@ from repro.serve.scheduler import DecodePlan, Request, ServeConfig
 
 
 # ---------------------------------------------------------------------------
-# jitted device steps (module-level so the jit cache is shared per model)
+# device-step bodies
+#
+# Plain functions, jitted twice below: once at module level for the
+# single-device executor (shared cache per model, exactly the pre-mesh
+# behavior) and once per (model, mesh) for the sharded executor, with
+# explicit ``in_shardings``/``out_shardings`` so the KV pools stay laid
+# out over the ('kv', 'hd') serve mesh across donated in-place updates.
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _apply_ptab_delta(ptab: jax.Array, rows: jax.Array,
-                      vals: jax.Array) -> jax.Array:
+def _ptab_delta_impl(ptab: jax.Array, rows: jax.Array,
+                     vals: jax.Array) -> jax.Array:
     """Scatter dirty rows into the persistent device page table."""
     return ptab.at[rows].set(vals)
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(4, 5))
-def _prefill_step(model: TransformerLM, params: Any, tokens: jax.Array,
+def _prefill_impl(model: TransformerLM, params: Any, tokens: jax.Array,
                   lens: jax.Array, k_pools: jax.Array, v_pools: jax.Array,
                   pt_rows: jax.Array):
     state = PagedKVState(k_pools, v_pools, pt_rows,
@@ -69,8 +80,7 @@ def _prefill_step(model: TransformerLM, params: Any, tokens: jax.Array,
     return logits, ns.k_pools, ns.v_pools
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(5, 6))
-def _continue_step(model: TransformerLM, params: Any, tokens: jax.Array,
+def _continue_impl(model: TransformerLM, params: Any, tokens: jax.Array,
                    starts: jax.Array, lens: jax.Array, k_pools: jax.Array,
                    v_pools: jax.Array, pt_rows: jax.Array):
     state = PagedKVState(k_pools, v_pools, pt_rows,
@@ -79,8 +89,7 @@ def _continue_step(model: TransformerLM, params: Any, tokens: jax.Array,
     return logits, ns.k_pools, ns.v_pools
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(3, 4))
-def _decode_step(model: TransformerLM, params: Any, tokens: jax.Array,
+def _decode_impl(model: TransformerLM, params: Any, tokens: jax.Array,
                  k_pools: jax.Array, v_pools: jax.Array, ptab: jax.Array,
                  pre_lens: jax.Array, active: jax.Array):
     # mask page-table rows of slots that are NOT decoding this step:
@@ -95,8 +104,7 @@ def _decode_step(model: TransformerLM, params: Any, tokens: jax.Array,
     return logits, ns.k_pools, ns.v_pools
 
 
-@functools.partial(jax.jit, static_argnums=(0, 10, 11), donate_argnums=(3, 4))
-def _decode_multi_step(model: TransformerLM, params: Any, tokens: jax.Array,
+def _decode_multi_impl(model: TransformerLM, params: Any, tokens: jax.Array,
                        k_pools: jax.Array, v_pools: jax.Array,
                        ptab: jax.Array, pre_lens: jax.Array,
                        steps_left: jax.Array, rng: jax.Array,
@@ -119,20 +127,129 @@ def _decode_multi_step(model: TransformerLM, params: Any, tokens: jax.Array,
     return block, ns.k_pools, ns.v_pools, rng
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1))
-def _copy_pages(k_pools: jax.Array, v_pools: jax.Array, srcs: jax.Array,
-                dsts: jax.Array):
+def _copy_pages_impl(k_pools: jax.Array, v_pools: jax.Array, srcs: jax.Array,
+                     dsts: jax.Array):
     """COW tail-page copies: all forked frames in each pool, one dispatch."""
     return (k_pools.at[:, dsts].set(k_pools[:, srcs]),
             v_pools.at[:, dsts].set(v_pools[:, srcs]))
 
 
+# single-device jit cache (module-level so it is shared per model)
+_apply_ptab_delta = jax.jit(_ptab_delta_impl, donate_argnums=(0,))
+_prefill_step = jax.jit(_prefill_impl, static_argnums=(0,),
+                        donate_argnums=(4, 5))
+_continue_step = jax.jit(_continue_impl, static_argnums=(0,),
+                         donate_argnums=(5, 6))
+_decode_step = jax.jit(_decode_impl, static_argnums=(0,),
+                       donate_argnums=(3, 4))
+_decode_multi_step = jax.jit(_decode_multi_impl, static_argnums=(0, 10, 11),
+                             donate_argnums=(3, 4))
+_copy_pages = jax.jit(_copy_pages_impl, donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_path_model(model: TransformerLM) -> TransformerLM:
+    """Ref-path twin of ``model`` for >1-device meshes.
+
+    The Pallas kernels assume a single device's pool view (scalar-
+    prefetched page tables index local frames), so a sharded executor
+    dispatches through a shallow copy with ``use_kernels=False`` — the jnp
+    reference paths, which GSPMD partitions freely.  Cached per model so
+    every engine over the same model shares the twin's jit traces; the
+    single-device executor (and the kernel differential grids) keep the
+    kernel paths live no matter how many devices the process can see.
+    """
+    import copy
+    twin = copy.copy(model)
+    twin.use_kernels = False
+    return twin
+
+
+@functools.lru_cache(maxsize=None)
+def _executor_shardings(mesh, num_kv_heads: int, head_dim: int):
+    """(pool, replicated) NamedShardings for an executor on ``mesh``.
+
+    Imported lazily: ``launch.specs`` pulls the full dry-run surface
+    (configs, optimizer, train step), which plain single-device serving
+    never needs.
+    """
+    from repro.launch.specs import executor_state_shardings
+    sh = executor_state_shardings(mesh, num_kv_heads, head_dim)
+    return sh["pool"], sh["replicated"]
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_steps(model: TransformerLM, mesh):
+    """Per-(model, mesh) jitted steps with explicit sharding contracts.
+
+    The model is bound via ``partial`` (it is a static self argument) so
+    ``in_shardings`` maps 1:1 onto the dynamic args.  Pools shard over the
+    ('kv', 'hd') mesh axes and are donated — XLA updates them in place,
+    shard-local; everything the scalar/OS plane produces or consumes
+    (page-table rows, tokens, positions, logits, the sampled block) is
+    replicated, the satp analogue every shard reads coherently.
+    """
+    pool, rep = _executor_shardings(
+        mesh, model.cfg.num_kv_heads, model.cfg.head_dim
+    )
+    return {
+        "ptab": jax.jit(_ptab_delta_impl, in_shardings=(rep, rep, rep),
+                        out_shardings=rep, donate_argnums=(0,)),
+        "prefill": jax.jit(
+            functools.partial(_prefill_impl, model),
+            in_shardings=(rep, rep, rep, pool, pool, rep),
+            out_shardings=(rep, pool, pool), donate_argnums=(3, 4),
+        ),
+        "continue": jax.jit(
+            functools.partial(_continue_impl, model),
+            in_shardings=(rep, rep, rep, rep, pool, pool, rep),
+            out_shardings=(rep, pool, pool), donate_argnums=(4, 5),
+        ),
+        "decode": jax.jit(
+            functools.partial(_decode_impl, model),
+            in_shardings=(rep, rep, pool, pool, rep, rep, rep),
+            out_shardings=(rep, pool, pool), donate_argnums=(2, 3),
+        ),
+        "copy_pages": jax.jit(
+            _copy_pages_impl, in_shardings=(pool, pool, rep, rep),
+            out_shardings=(pool, pool), donate_argnums=(0, 1),
+        ),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_decode_multi(model: TransformerLM, mesh, horizon: int,
+                          greedy: bool):
+    """Sharded fused-horizon dispatch; cached per (model, mesh, K, greedy)
+    — the horizon ladder is O(log max_horizon) powers of two, so this
+    cache stays as small as the single-device one."""
+    pool, rep = _executor_shardings(
+        mesh, model.cfg.num_kv_heads, model.cfg.head_dim
+    )
+    return jax.jit(
+        functools.partial(_decode_multi_impl, model, horizon=horizon,
+                          greedy=greedy),
+        in_shardings=(rep, rep, pool, pool, rep, rep, rep, rep, rep),
+        out_shardings=(rep, pool, pool, rep), donate_argnums=(2, 3),
+    )
+
+
 class Executor:
-    """Owns KV pools + the device page table; executes scheduler plans."""
+    """Owns KV pools + the device page table; executes scheduler plans.
+
+    With ``mesh`` (a ('kv', 'hd') serve mesh, see
+    :func:`repro.launch.mesh.make_host_serve_mesh`) the KV pools shard
+    jointly over KV heads and head_dim while the page table and every
+    scalar-plane operand replicate — the Scheduler needs no changes, which
+    is the point of the split.  All dispatches carry explicit
+    ``in_shardings``/``out_shardings`` with donated pools, so spill /
+    restore / COW-fork / ptab-delta updates preserve the layout;
+    :meth:`check_sharding_invariants` asserts that after every mutation.
+    """
 
     def __init__(self, model: TransformerLM, params: Any, cfg: ServeConfig,
                  vmem: VirtualMemory, cost: CostModel | None = None,
-                 counters: PerfCounters | None = None):
+                 counters: PerfCounters | None = None, mesh=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -149,6 +266,65 @@ class Executor:
             (cfg.max_batch, cfg.max_pages_per_seq), INVALID_PAGE, jnp.int32
         )
         self._rng = jax.random.PRNGKey(cfg.seed)
+        self.mesh = mesh
+        self._pool_sh = self._rep_sh = None
+        self._step_model = model
+        if mesh is not None:
+            if mesh.size > 1 and getattr(model, "use_kernels", False):
+                # Pallas paths cannot trace into a >1-device layout; the
+                # twin reroutes every op to the jnp ref path under GSPMD
+                self._step_model = _ref_path_model(model)
+            self._pool_sh, self._rep_sh = _executor_shardings(
+                mesh, model.cfg.num_kv_heads, model.cfg.head_dim
+            )
+            self._steps = _sharded_steps(self._step_model, mesh)
+            # commit the persistent state to its declared layout; params
+            # replicate (TP of the weights is the dry-run serving view's
+            # job — the executor's contract is the KV/page-table state)
+            self.params = jax.device_put(params, self._rep_sh)
+            self.kv = self.kv._replace(
+                k_pools=jax.device_put(self.kv.k_pools, self._pool_sh),
+                v_pools=jax.device_put(self.kv.v_pools, self._pool_sh),
+            )
+            self._ptab = jax.device_put(self._ptab, self._rep_sh)
+        else:
+            # same call surface as the sharded table so every dispatch
+            # site below is placement-oblivious
+            self._steps = {
+                "ptab": _apply_ptab_delta,
+                "prefill": functools.partial(_prefill_step, model),
+                "continue": functools.partial(_continue_step, model),
+                "decode": functools.partial(_decode_step, model),
+                "copy_pages": _copy_pages,
+            }
+
+    # ------------------------------------------------------------------
+    # sharding invariants (mesh mode)
+    # ------------------------------------------------------------------
+
+    def check_sharding_invariants(self) -> None:
+        """Mesh mode: every persistent device array must still carry its
+        declared layout.  The update paths that could silently reshard it
+        — donated step outputs, the ptab delta scatter, COW tail copies,
+        and page-granular spill/restore through ``ContextSwitcher`` —
+        all run between two calls of this check, so a drift (which would
+        cost a full rematerialization on the next dispatch) fails loudly
+        instead of showing up as a perf cliff.  Metadata-only: no device
+        sync."""
+        if self.mesh is None:
+            return
+        for name, arr, want in (
+            ("k_pools", self.kv.k_pools, self._pool_sh),
+            ("v_pools", self.kv.v_pools, self._pool_sh),
+            ("page_table", self._ptab, self._rep_sh),
+        ):
+            if not arr.sharding.is_equivalent_to(want, arr.ndim):
+                # a real exception, not `assert`: the guard must survive
+                # `python -O`, where asserts are compiled out
+                raise RuntimeError(
+                    f"executor {name} drifted off its declared layout: "
+                    f"{arr.sharding} != {want}"
+                )
 
     # ------------------------------------------------------------------
     # persistent device page table
@@ -158,11 +334,12 @@ class Executor:
         """Apply host page-table deltas (dirty rows only) to the device."""
         rows, vals = self.vmem.drain_dirty_rows()
         if rows.size:
-            self._ptab = _apply_ptab_delta(
+            self._ptab = self._steps["ptab"](
                 self._ptab, jnp.asarray(rows), jnp.asarray(vals)
             )
             self.counters.inc("ptab_rows_uploaded", int(rows.size))
             self.counters.inc("ptab_syncs")
+            self.check_sharding_invariants()
 
     @property
     def device_page_table(self) -> jax.Array:
@@ -171,6 +348,17 @@ class Executor:
     # ------------------------------------------------------------------
     # compute steps
     # ------------------------------------------------------------------
+
+    def _decode_multi_fn(self, horizon: int):
+        """The fused-horizon dispatch for ``horizon`` (statics bound)."""
+        if self.mesh is not None:
+            return _sharded_decode_multi(
+                self._step_model, self.mesh, horizon, self.cfg.greedy
+            )
+        return functools.partial(
+            _decode_multi_step, self.model,
+            horizon=horizon, greedy=self.cfg.greedy,
+        )
 
     def preload_prefix(self, prefix_tokens: np.ndarray, slot: int,
                        n: int) -> None:
@@ -181,8 +369,8 @@ class Executor:
         if pad:
             tokens = np.pad(tokens, ((0, 0), (0, pad)))
         pt_rows = jnp.take(self._ptab, jnp.asarray([slot]), axis=0)
-        _, k, v = _prefill_step(
-            self.model, self.params, jnp.asarray(tokens),
+        _, k, v = self._steps["prefill"](
+            self.params, jnp.asarray(tokens),
             jnp.asarray([n], jnp.int32), self.kv.k_pools, self.kv.v_pools,
             pt_rows,
         )
@@ -211,8 +399,8 @@ class Executor:
         self.sync_page_table()
         tokens, lens, pt_rows = self._pad_prompt_batch(reqs)
         with self.counters.timer("prefill"):
-            logits, k, v = _prefill_step(
-                self.model, self.params, jnp.asarray(tokens),
+            logits, k, v = self._steps["prefill"](
+                self.params, jnp.asarray(tokens),
                 jnp.asarray(lens), self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
             # async dispatch returns immediately; block so the timer
@@ -228,8 +416,8 @@ class Executor:
         returns sampled tokens by slot."""
         self.sync_page_table()
         with self.counters.timer("decode"):
-            logits, k, v = _decode_step(
-                self.model, self.params, jnp.asarray(tokens),
+            logits, k, v = self._steps["decode"](
+                self.params, jnp.asarray(tokens),
                 self.kv.k_pools, self.kv.v_pools, self._ptab,
                 jnp.asarray(pre_lens), jnp.asarray(active),
             )
@@ -248,16 +436,16 @@ class Executor:
         the horizon touches, so exactly one page-table delta sync happens
         per horizon."""
         self.sync_page_table()
+        fused = self._decode_multi_fn(plan.horizon)
         with self.counters.timer("decode"):
-            block, k, v, rng = _decode_multi_step(
-                self.model, self.params, jnp.asarray(plan.tokens),
+            block, k, v, rng = fused(
+                self.params, jnp.asarray(plan.tokens),
                 self.kv.k_pools, self.kv.v_pools, self._ptab,
                 jnp.asarray(plan.pre_lens), jnp.asarray(plan.steps_left),
                 # plain float -> weak-typed scalar under jit: logits /
                 # temperature keeps the logits dtype, exactly like the
                 # host path's division by the Python float
                 self._rng, float(self.cfg.temperature),
-                plan.horizon, self.cfg.greedy,
             )
             jax.block_until_ready(block)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
@@ -282,7 +470,7 @@ class Executor:
         self.sync_page_table()
         copies = [tc for tc in tail_copies if tc is not None]
         if copies:
-            k, v = _copy_pages(
+            k, v = self._steps["copy_pages"](
                 self.kv.k_pools, self.kv.v_pools,
                 jnp.asarray([src for src, _ in copies]),
                 jnp.asarray([dst for _, dst in copies]),
@@ -290,14 +478,15 @@ class Executor:
             self.kv = self.kv._replace(k_pools=k, v_pools=v)
         chunks, lens, pt_rows = self._pad_prompt_batch(reqs)
         with self.counters.timer("prefill"):
-            logits, k, v = _continue_step(
-                self.model, self.params, jnp.asarray(chunks),
+            logits, k, v = self._steps["continue"](
+                self.params, jnp.asarray(chunks),
                 jnp.asarray(start_lens, jnp.int32),
                 jnp.asarray(lens),
                 self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
             jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self.check_sharding_invariants()
         self.counters.inc("continuation_prefill_tokens", int(lens.sum()))
         first = self.sample(logits)
         return [np.asarray(first[i]) for i in range(len(reqs))]
@@ -320,6 +509,10 @@ class Executor:
             req.req_id, self.kv.k_pools, self.kv.v_pools
         )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        # the switcher's scatter is layout-oblivious; the pools must come
+        # back in the declared mesh layout or every later dispatch pays a
+        # full rematerialization
+        self.check_sharding_invariants()
 
     def discard(self, req: Request) -> None:
         """Free a failed request's host-side swap record (never restored)."""

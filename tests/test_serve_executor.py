@@ -263,3 +263,36 @@ class TestHotPathContracts:
         assert st.bytes_spilled < st.switches * full_pool_bytes
         # a victim holds at most max_pages_per_seq pages in each pool
         assert st.pages_spilled <= st.switches * 2 * serve_cfg.max_pages_per_seq
+
+
+class TestMeshModeSingleDevice:
+    """Mesh-mode executor on however many devices this process has.
+
+    With one visible device ``make_host_serve_mesh`` degrades to a 1x1
+    mesh, so this runs in the tier-1 fast suite everywhere and keeps the
+    sharded code path (explicit in/out shardings, donated sharded pools,
+    the layout-invariant check) covered; the real multi-device identity
+    suite is ``tests/test_serve_sharded.py`` (marker ``sharded``).
+    """
+
+    def test_mesh_engine_token_identical_and_layout_stable(
+            self, model_and_params):
+        from repro.launch.mesh import make_host_serve_mesh
+
+        cfg, model, params = model_and_params
+        mesh = make_host_serve_mesh(cfg.num_kv_heads, cfg.head_dim)
+        reqs = mixed_workload(cfg)
+        serve_cfg = ServeConfig(page_size=4, num_pages=16,
+                                max_pages_per_seq=16, max_batch=3)
+        plain, done_p = run_engine(Engine, model, params, serve_cfg, reqs)
+        eng = Engine(model, params, serve_cfg, mesh=mesh)
+        for r in reqs:
+            eng.submit(copy.deepcopy(r))
+        done_m = eng.run()
+        assert eng.counters.get("preemptions") > 0
+        assert {i: [int(x) for x in done_m[i].output] for i in done_m} == {
+            i: [int(x) for x in done_p[i].output] for i in done_p}
+        # layouts survived every update path of the preempting workload
+        eng.executor.check_sharding_invariants()
+        assert eng.executor.kv.k_pools.sharding.is_equivalent_to(
+            eng.executor._pool_sh, eng.executor.kv.k_pools.ndim)

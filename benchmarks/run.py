@@ -11,12 +11,13 @@ contract).  Sections (select a subset with ``--only``):
   s31      — scheduler ticks + context switches              (bench_context_switch)
   serve    — seed vs Scheduler/Executor serving split        (bench_serve_throughput)
   sharded  — executor over the ('kv','hd') serve mesh        (bench_serve_sharded)
+  router   — ReplicaRouter over N engines vs N=1             (bench_serve_router)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-Three sections double as CI gates when explicitly selected:
+Four sections double as CI gates when explicitly selected:
   * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
     gathers at least as many bytes as the gathered-pages reference path;
   * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
@@ -31,11 +32,18 @@ Three sections double as CI gates when explicitly selected:
     to the policy plane.  Multi-device coverage needs
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
     ``multidevice`` job); with one device the mesh degrades to 1x1 and
-    the gate still checks the sharded code path.
+    the gate still checks the sharded code path;
+  * ``--only router`` exits nonzero unless the replica sweep (a
+    ReplicaRouter over N in {1,2,4} engines) is per-request
+    token-identical to the N=1 reference AND the router's global
+    page/counter accounting equals the sum of the per-replica
+    accounting.
 
-The serve section also appends its metrics to ``BENCH_serve.json`` at the
-repo root — the machine-readable perf trajectory across PRs, which
-``scripts/bench_regress.py`` gates on (counters only, never tok/s).
+The serve and router sections also append their metrics (tagged with a
+``section`` field) to ``BENCH_serve.json`` at the repo root — the
+machine-readable perf trajectory across PRs, which
+``scripts/bench_regress.py`` gates on per section (counters only, never
+tok/s).
 """
 
 from __future__ import annotations
@@ -66,10 +74,13 @@ def _s31():
     return bench_context_switch.main()
 
 
-def _record_serve_trajectory(metrics: dict) -> None:
-    """Append the serve metrics to ``BENCH_serve.json`` (repo root): a JSON
+def _record_serve_trajectory(metrics: dict, section: str = "serve") -> None:
+    """Append the metrics to ``BENCH_serve.json`` (repo root): a JSON
     array, one record per benchmark run, so the perf trajectory across PRs
-    is machine-readable instead of buried in CI logs."""
+    is machine-readable instead of buried in CI logs.  Records are tagged
+    with their ``section`` (``serve``, ``router``, ...) so
+    ``scripts/bench_regress.py`` compares like with like; untagged legacy
+    records read as ``serve``."""
     path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
     history = []
     if path.exists():
@@ -86,7 +97,8 @@ def _record_serve_trajectory(metrics: dict) -> None:
                   f"{backup.name}, starting a fresh trajectory")
             history = []
     history.append(
-        {"t": time.strftime("%Y-%m-%dT%H:%M:%S"), "metrics": metrics}
+        {"t": time.strftime("%Y-%m-%dT%H:%M:%S"), "section": section,
+         "metrics": metrics}
     )
     path.write_text(json.dumps(history, indent=2) + "\n")
     print(f"trajectory -> {path} ({len(history)} records)")
@@ -136,6 +148,26 @@ def _sharded(gate: bool = False):
     return csv
 
 
+def _router(gate: bool = False):
+    from benchmarks import bench_serve_router
+    csv, metrics = bench_serve_router.run()
+    _record_serve_trajectory(metrics, section="router")
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append(
+            "replica-sweep outputs diverged from the N=1 reference run "
+            "(or done statuses are not a permutation of it)")
+    if not metrics["accounting_identical"]:
+        failures.append(
+            "router global page/counter accounting != sum of per-replica "
+            "accounting")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only router: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -172,6 +204,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("sharded",
      "Sharded executor over the ('kv','hd') serve mesh vs single-device",
      _sharded),
+    ("router",
+     "Replica sweep: ReplicaRouter over N engines vs the N=1 reference",
+     _router),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -195,7 +230,7 @@ def main(argv: list[str] | None = None) -> None:
         if args.only is not None and key not in args.only:
             continue
         section(title)
-        if key in ("prefill", "serve", "sharded"):
+        if key in ("prefill", "serve", "sharded", "router"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)

@@ -31,21 +31,35 @@ import sys
 
 REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
-#: (name, extractor, direction): "le" = new must stay <= prev, "ge" = >=
-CHECKS = (
-    ("host_syncs_per_token",
-     lambda m: float(m["host_syncs_per_token"]), "le"),
-    ("ptab_syncs_per_token",
-     lambda m: float(m["sweep"]["auto"]["ptab_syncs_per_tok"]), "le"),
-    ("mean_horizon",
-     lambda m: float(m["mean_horizon"]), "ge"),
-)
+#: per-section (name, extractor, direction): "le" = new must stay <=
+#: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
+#: ``serve`` and ``router`` gates (tagged with a "section" field;
+#: untagged legacy records are ``serve``), so each section is compared
+#: against its OWN previous record — never serve-vs-router.
+CHECKS_BY_SECTION = {
+    "serve": (
+        ("host_syncs_per_token",
+         lambda m: float(m["host_syncs_per_token"]), "le"),
+        ("ptab_syncs_per_token",
+         lambda m: float(m["sweep"]["auto"]["ptab_syncs_per_tok"]), "le"),
+        ("mean_horizon",
+         lambda m: float(m["mean_horizon"]), "ge"),
+    ),
+    "router": (
+        ("host_syncs_per_token",
+         lambda m: float(m["host_syncs_per_token"]), "le"),
+        ("ptab_syncs_per_token",
+         lambda m: float(m["sweep"]["2"]["ptab_syncs_per_tok"]), "le"),
+        ("mean_horizon",
+         lambda m: float(m["mean_horizon"]), "ge"),
+    ),
+}
 
 
-def compare(prev: dict, new: dict) -> list[str]:
+def compare(prev: dict, new: dict, section: str = "serve") -> list[str]:
     """Regression messages comparing two metric records (empty = pass)."""
     failures = []
-    for name, extract, direction in CHECKS:
+    for name, extract, direction in CHECKS_BY_SECTION[section]:
         try:
             p, n = extract(prev), extract(new)
         except (KeyError, TypeError):
@@ -53,10 +67,12 @@ def compare(prev: dict, new: dict) -> list[str]:
             continue
         if direction == "le" and n > p * (1 + REL_SLACK) + 1e-12:
             failures.append(
-                f"{name} regressed: {p:.6f} -> {n:.6f} (must not increase)")
+                f"[{section}] {name} regressed: {p:.6f} -> {n:.6f} "
+                "(must not increase)")
         elif direction == "ge" and n < p * (1 - REL_SLACK) - 1e-12:
             failures.append(
-                f"{name} regressed: {p:.6f} -> {n:.6f} (must not decrease)")
+                f"[{section}] {name} regressed: {p:.6f} -> {n:.6f} "
+                "(must not decrease)")
     return failures
 
 
@@ -73,12 +89,22 @@ def main(argv: list[str]) -> int:
               f"{len(history) if isinstance(history, list) else '?'} "
               "record(s) — need two to compare")
         return 0
-    prev, new = history[-2], history[-1]
-    failures = compare(prev["metrics"], new["metrics"])
+    failures: list[str] = []
+    for section in CHECKS_BY_SECTION:
+        recs = [r for r in history
+                if r.get("section", "serve") == section]
+        if len(recs) < 2:
+            print(f"bench_regress: {len(recs)} {section} record(s) — "
+                  "need two to compare")
+            continue
+        prev, new = recs[-2], recs[-1]
+        section_failures = compare(prev["metrics"], new["metrics"], section)
+        failures += section_failures
+        if not section_failures:
+            print(f"bench_regress: {section} counters OK "
+                  f"({prev['t']} -> {new['t']})")
     for f in failures:
         print(f"FAIL: {f}")
-    if not failures:
-        print(f"bench_regress: counters OK ({prev['t']} -> {new['t']})")
     return 1 if failures else 0
 
 

@@ -2,11 +2,16 @@
 # Tier-1 verification without the multi-minute sharding subprocesses:
 #   1. byte-compile the whole tree (catches syntax/indent errors fast);
 #   2. import the package surface (catches broken module wiring);
-#   3. run the kernel differential grid, then the `fast` pytest subset;
-#   4. serve gate (`benchmarks/run.py --only serve`) + the counter-based
-#      regression gate (`scripts/bench_regress.py` over BENCH_serve.json);
-#   5. IF >1 host device is advertised: the `sharded` pytest subset and
-#      the sharded-executor parity gate.
+#   3. run the kernel differential grid, the `router` suite (multi-replica
+#      fault-injection harness, fake planes — pure host policy, fail
+#      fast), then the `fast` pytest subset;
+#   4. serve gate (`benchmarks/run.py --only serve`) + router replica-
+#      sweep gate (`--only router`: token identity vs N=1 + global-vs-
+#      per-replica accounting) + the counter-based regression gate
+#      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
+#   5. IF >1 host device is advertised: the `sharded` pytest subset
+#      (including the router-over-sharded-executors tests) and the
+#      sharded-executor parity gate.
 # The full gate (including sharding dry-runs) stays:
 #   PYTHONPATH=src python -m pytest -q
 #
@@ -41,11 +46,17 @@ PY
 echo "== kernel differential grids (fail fast on kernel regressions)"
 python -m pytest -q -m kernels "$@"
 
+echo "== router suite (multi-replica fault-injection harness, fake planes)"
+python -m pytest -q -m "router and not sharded" "$@"
+
 echo "== fast tests"
-python -m pytest -q -m "fast and not kernels and not sharded" "$@"
+python -m pytest -q -m "fast and not kernels and not sharded and not router" "$@"
 
 echo "== serve gate (fused decode horizon must amortize host syncs)"
 python -m benchmarks.run --only serve
+
+echo "== router replica-sweep gate (token identity vs N=1 + accounting)"
+python -m benchmarks.run --only router
 
 echo "== serve counter regression gate (BENCH_serve.json trajectory)"
 python scripts/bench_regress.py

@@ -43,6 +43,18 @@ class PerfCounters:
     def get(self, name: str) -> int:
         return self.counters[name]
 
+    @staticmethod
+    def merged(parts: "Iterator[PerfCounters] | Any") -> collections.Counter:
+        """Element-wise sum of several counter sets (cross-replica
+        accounting: the router's global view must equal the sum of the
+        per-replica views — ``merged`` is how the global side of that
+        invariant is computed, and the test suite asserts the equality
+        counter by counter)."""
+        total: collections.Counter[str] = collections.Counter()
+        for p in parts:
+            total.update(p.counters)
+        return total
+
     def ratio(self, num: str, den: str) -> float:
         """``counters[num] / counters[den]`` (0.0 when the denominator is 0).
 

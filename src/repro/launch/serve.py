@@ -35,6 +35,16 @@ def main() -> None:
                     help="fused decode horizon cap: up to K chained decode "
                          "steps per dispatch with on-device sampling "
                          "(1 disables fusion)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="model replicas behind the ReplicaRouter: N "
+                         "independent Scheduler+Executor pairs (each with "
+                         "its own KV pools / page table) fed from one "
+                         "global admission queue; 1 = the plain engine")
+    ap.add_argument("--route-policy", default="least_loaded",
+                    choices=("least_loaded", "round_robin"),
+                    help="replica placement policy (fork affinity is "
+                         "always enforced on top: COW forks stay on a "
+                         "prefix-holding replica)")
     ap.add_argument("--serve-mesh", default="off",
                     help="shard the executor's KV pools over a ('kv','hd') "
                          "serve mesh: 'auto' factors all visible devices "
@@ -60,7 +70,7 @@ def main() -> None:
         print(f"serve mesh: {dict(mesh.shape)} over {mesh.size} of "
               f"{jax.device_count()} visible devices (KV pools sharded, "
               "page table replicated)")
-    eng = Engine(model, params, ServeConfig(
+    serve_cfg = ServeConfig(
         page_size=args.page_size, num_pages=args.num_pages,
         max_pages_per_seq=max(
             4, (args.prefix_len + args.prompt_len + args.max_new_tokens)
@@ -68,27 +78,41 @@ def main() -> None:
         ),
         max_batch=args.max_batch,
         max_horizon=args.max_horizon,
-    ), mesh=mesh)
+    )
+    engines = [Engine(model, params, serve_cfg, mesh=mesh)
+               for _ in range(max(1, args.replicas))]
+    eng = engines[0]
+    router = None
+    if args.replicas > 1:
+        from repro.serve import ReplicaRouter
+        router = ReplicaRouter(
+            [e.as_replica(i) for i, e in enumerate(engines)],
+            policy=args.route_policy,
+        )
+        print(f"replica router: {args.replicas} replicas "
+              f"({args.route_policy}; each {args.num_pages} frames, "
+              f"max_batch {args.max_batch})")
     rng = np.random.default_rng(args.seed)
     share = args.prefix_len > 0
     if share:
-        eng.preload_prefix(
-            rng.integers(0, cfg.vocab_size,
-                         size=args.prefix_len).astype(np.int32)
-        )
+        prefix = rng.integers(0, cfg.vocab_size,
+                              size=args.prefix_len).astype(np.int32)
+        for e in engines:     # every replica can parent COW forks
+            e.preload_prefix(prefix)
+    front = router if router is not None else eng
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
         shape = (plen, cfg.num_codebooks) if (
             cfg.family == "audio" and cfg.num_codebooks > 1
         ) else (plen,)
-        eng.submit(Request(
+        front.submit(Request(
             req_id=i,
             prompt=rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32),
             max_new_tokens=args.max_new_tokens,
             share_prefix=share,
         ))
     t0 = time.perf_counter()
-    done = eng.run()
+    done = front.run()
     dt = time.perf_counter() - t0
     stats = eng.stats()
     total_tokens = sum(len(r.output) for r in done.values())
@@ -98,6 +122,16 @@ def main() -> None:
           f"({n_failed} failed reach checks), "
           f"{total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / dt:.1f} tok/s on CPU interpret)")
+    if router is not None:
+        r = router.counters
+        print(f"router: {r.get('placements')} placements "
+              f"({', '.join(str(r.get(f'placements_replica{i}')) for i in range(args.replicas))} per replica), "
+              f"{r.get('migrations_declined')} migrations declined, "
+              f"{r.get('cross_replica_queue_waits')} queue-wait steps")
+        print("router global counters:", dict(router.global_counters()))
+        print("router global pages:", router.global_page_report())
+        router.check_invariants()
+        print("-- replica 0 detail --")
     print("scheduler (policy plane) counters:", stats["counters"])
     print("executor (data plane): context switches:", stats["switch_stats"])
     print(f"  page-table delta uploads: "

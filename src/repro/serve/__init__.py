@@ -1,20 +1,37 @@
 """Serving: continuous batching over paged virtual memory (the "OS").
 
-Split per the AraOS architecture: :class:`Scheduler` is the host-side
-CVA6/OS plane (policy, no device arrays), :class:`Executor` is the
-device-resident Ara2 data plane (KV pools, persistent page table, jitted
-steps), and :class:`Engine` is the thin facade wiring them together.
+Split per the AraOS architecture, one layer per plane:
+
+  **Router -> Scheduler(ReplicaState) -> DataPlane.**
+  :class:`ReplicaRouter` (:mod:`repro.serve.router`) is the multi-replica
+  control plane: it owns the global admission queue and places requests
+  over N replicas (fork-affinity keeps COW forks on the prefix-holding
+  replica; least-loaded-pages / round-robin rank the rest).  Each replica
+  is a :class:`Scheduler` — the host-side CVA6/OS plane (policy, no
+  device arrays), with every piece of per-replica mutable state factored
+  into :class:`ReplicaState` — driving a :class:`DataPlane`: in
+  production the device-resident :class:`Executor` (optionally sharded
+  over a ('kv','hd') mesh), in tests a host-only fake.  Replicas share no
+  mutable state, and the single-replica :class:`Engine` (the thin
+  Scheduler+Executor facade) is exactly the N=1 instance of the layering:
+  a one-replica router with the default unbounded backlog is
+  call-for-call, token-for-token the plain engine — the equivalence the
+  router test suite gates on for N in {1, 2, 4}.
+
 :class:`ReferenceEngine` is the frozen pre-split seed implementation kept
 for equivalence testing and before/after benchmarks.
 """
 from repro.serve.engine import Engine
 from repro.serve.executor import Executor
 from repro.serve.reference import ReferenceEngine
+from repro.serve.router import Replica, ReplicaRouter
 from repro.serve.scheduler import (
     DataPlane,
     DecodePlan,
     HostOnlyPlane,
+    ReplicaState,
     Request,
+    RestoreFailure,
     Scheduler,
     ServeConfig,
 )
@@ -26,7 +43,11 @@ __all__ = [
     "Executor",
     "HostOnlyPlane",
     "ReferenceEngine",
+    "Replica",
+    "ReplicaRouter",
+    "ReplicaState",
     "Request",
+    "RestoreFailure",
     "Scheduler",
     "ServeConfig",
 ]

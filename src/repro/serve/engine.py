@@ -54,6 +54,14 @@ The device pool reserves its LAST frame as scratch for masked decode
 lanes: the engine hands ``VirtualMemory`` one frame fewer than physically
 allocated.  The frozen pre-split implementation lives in
 :mod:`repro.serve.reference` for equivalence tests and benchmarks.
+
+**Multi-replica layering.**  One engine is one replica: the
+:class:`~repro.serve.router.ReplicaRouter` places requests from a global
+admission queue across N of these (fork affinity, least-loaded-pages or
+round-robin) and drives each replica's Scheduler through the same
+:meth:`~repro.serve.scheduler.Scheduler.step_plane` loop this engine's
+``step`` delegates to.  Replicas share no mutable state — the N=1 router
+is call-for-call this engine.
 """
 
 from __future__ import annotations
@@ -159,26 +167,19 @@ class Engine:
         return self.scheduler.done
 
     def step(self) -> None:
-        sched = self.scheduler
-        sched.begin_step()
-        sched.try_restore()
-        admitted = sched.admit()
-        if admitted:
-            first = self.executor.prefill(admitted)
-            sched.finish_prefill(admitted, first)
-        # ``plan_decode`` picks a fused horizon K (1 under pool pressure or
-        # pending admissions/restores) and pre-faults every page K steps
-        # will touch in one batched allocation
-        plan = sched.plan_decode()
-        if plan is not None:
-            if plan.horizon > 1:
-                block = self.executor.decode_multi(plan)
-                sched.commit_decode(block, horizon=plan.horizon)
-            else:
-                sampled = self.executor.decode(
-                    plan.tokens, plan.pre_lens, plan.active
-                )
-                sched.commit_decode(sampled)
+        # the canonical serving step lives on the Scheduler
+        # (``step_plane``): restore -> admit/prefill -> fused-horizon
+        # decode -> commit, driven through the DataPlane protocol.  The
+        # multi-replica router (repro.serve.router) drives the same loop
+        # once per replica — this engine IS its N=1 instance.
+        self.scheduler.step_plane()
+
+    def as_replica(self, replica_id: int):
+        """This engine as one replica of a
+        :class:`~repro.serve.router.ReplicaRouter` (its Scheduler and
+        Executor are already wired and share one counter set)."""
+        from repro.serve.router import Replica
+        return Replica.from_engine(self, replica_id)
 
     # ------------------------------------------------------------------
     # stats

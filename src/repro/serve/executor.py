@@ -31,7 +31,13 @@ spill/restore.  Here:
     scaling lanes/cores under one shared, coherent translation structure.
 
 The executor implements the scheduler's :class:`~repro.serve.scheduler.
-DataPlane` protocol; it makes no policy decisions.
+DataPlane` protocol — both the movement surface (spill/restore/discard/
+fork) and the compute surface (prefill/decode/decode_multi) that
+``Scheduler.step_plane`` drives — and makes no policy decisions.  One
+executor is one replica's data plane: the multi-replica router
+(:mod:`repro.serve.router`) runs N of these behind one admission
+front-end, each with its own KV pools, page table and page pool (no
+cross-replica device state).
 """
 
 from __future__ import annotations

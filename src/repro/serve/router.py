@@ -1,0 +1,368 @@
+"""Multi-replica serving control plane: one admission front-end, N planes.
+
+Ara2 (Perotti et al., 2023) scales the Ara lane datapath to multi-core by
+replicating the compute fabric behind one shared front-end; AraOS's claim
+is that the shared translation/OS structure stays off the datapath's
+critical path while it does.  This module is the serving restatement of
+that shape: a :class:`ReplicaRouter` owns the **global admission queue**
+and places requests across N model replicas — each a
+:class:`~repro.serve.scheduler.Scheduler` (per-replica policy, its own
+:class:`~repro.serve.scheduler.ReplicaState`) driving its own
+:class:`~repro.serve.scheduler.DataPlane` (a device
+:class:`~repro.serve.executor.Executor`, optionally mesh-sharded, or a
+test fake).  Replicas share **no mutable state**: page pools, KV pools,
+swap records and step clocks are all per-replica, so the router is pure
+placement policy on top of N independent single-replica engines — and the
+single-replica engine is exactly the ``N=1`` instance of this layering.
+
+Placement policies (``policy=``):
+
+``least_loaded``
+    Fewest committed-plus-backlogged pages (frames in use + the page
+    demand of requests already queued on the replica); ties break toward
+    the lowest replica id.  The default.
+``round_robin``
+    Cyclic over replicas, skipping ineligible ones.
+
+**Fork affinity** is not a policy but a correctness constraint layered on
+both: a ``share_prefix`` request COW-forks the resident prefix's page
+table, and those shared pages live in ONE replica's pool — so forks are
+only ever placed on a replica holding the prefix (the "parent").  When
+the affinity constraint overrides the base policy's unconstrained choice,
+the router counts a ``migrations_declined`` (the fork was *not* migrated
+to the otherwise-best replica, keeping prefix sharing instead).
+
+Counters (router-global, in ``router.counters``): ``submitted``,
+``placements``, ``placements_replica{i}``, ``migrations_declined``,
+``cross_replica_queue_waits`` (request-steps spent in the global queue
+while every eligible replica was at its backlog bound).  Each replica's
+scheduler/executor counters stay per-replica; ``global_counters()``
+merges them, and the test-suite invariant is that every merged total
+equals the sum of the per-replica values (no event is double- or
+un-counted by adding replicas).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from collections import deque
+from typing import Any
+
+from repro.core import PerfCounters
+from repro.serve.scheduler import DataPlane, Request, Scheduler
+
+
+@dataclasses.dataclass(eq=False)     # identity semantics: list.index / in
+class Replica:
+    """One model replica: a policy plane bound to its data plane.
+
+    ``scheduler.counters`` must be the SAME object the plane increments
+    (the :class:`~repro.serve.engine.Engine` wiring), so per-replica
+    accounting covers both planes without double counting.
+    """
+
+    replica_id: int
+    scheduler: Scheduler
+    plane: DataPlane
+
+    @classmethod
+    def from_engine(cls, engine: Any, replica_id: int) -> "Replica":
+        """Bind a single-replica :class:`~repro.serve.engine.Engine` as
+        one replica of a router (its Scheduler/Executor pair is already
+        wired and counter-shared)."""
+        engine.scheduler.state.replica_id = replica_id
+        return cls(replica_id=replica_id, scheduler=engine.scheduler,
+                   plane=engine.executor)
+
+    @property
+    def has_prefix(self) -> bool:
+        """True when this replica holds a resident shared prefix a fork
+        could COW from."""
+        s = self.scheduler
+        return s.prefix_len > 0 and s.vmem.has_seq(s.PREFIX_ID)
+
+    def load_pages(self) -> int:
+        """Placement load metric: frames committed in the pool plus the
+        page demand of requests already placed but still queued here.
+        The backlog term is what spreads a burst submitted before any
+        step runs — committed frames alone are all-zero then."""
+        s = self.scheduler
+        return s.vmem.pool.num_used + sum(
+            s.required_pages(r) for r in s.queue
+        )
+
+    def page_report(self) -> dict[str, int]:
+        pool = self.scheduler.vmem.pool
+        return {"frames": pool.num_pages, "free": pool.num_free,
+                "used": pool.num_used, "faults": pool.fault_count}
+
+
+class ReplicaRouter:
+    """Places requests from a global admission queue over N replicas and
+    drives every busy replica one :meth:`Scheduler.step_plane` per router
+    step.  With one replica and the default unbounded backlog this is
+    call-for-call the single-replica ``Engine`` loop."""
+
+    POLICIES = ("least_loaded", "round_robin")
+
+    def __init__(self, replicas: list[Replica],
+                 policy: str = "least_loaded",
+                 counters: PerfCounters | None = None,
+                 max_backlog: int | None = None):
+        """``max_backlog``: per-replica queued-request bound; placement
+        defers (requests wait in the global queue, counted as
+        ``cross_replica_queue_waits``) while every eligible replica is at
+        the bound AND at least one replica is still busy.  ``None``
+        (default) places immediately — required for exact N=1
+        equivalence with the plain engine."""
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        ids = [rep.replica_id for rep in replicas]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate replica ids: {ids}")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {self.POLICIES}")
+        self.replicas = list(replicas)
+        self.policy = policy
+        self.counters = counters or PerfCounters()
+        self.max_backlog = max_backlog
+        self.queue: deque[Request] = deque()   # global admission queue
+        self.step_i = 0                        # router engine-steps
+        self._rr_next = 0
+
+    # ------------------------------------------------------------------
+    # queue API
+    # ------------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            rep.scheduler.has_work for rep in self.replicas
+        )
+
+    @property
+    def done(self) -> dict[int, Request]:
+        """Merged done map (per-replica completion order preserved within
+        each replica; cross-replica order is replica-major)."""
+        merged: dict[int, Request] = {}
+        for rep in self.replicas:
+            merged.update(rep.scheduler.done)
+        return merged
+
+    def submit(self, req: Request) -> None:
+        self.counters.inc("submitted")
+        self.queue.append(req)
+        self._place_pending()
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+
+    def _eligible(self, req: Request) -> tuple[list[Replica], bool]:
+        """Replicas that can legally host ``req``; second element flags
+        the fork-affinity constraint (COW pages cannot cross pools)."""
+        if req.share_prefix:
+            elig = [rep for rep in self.replicas if rep.has_prefix]
+            if not elig:
+                raise ValueError(
+                    f"request {req.req_id} wants share_prefix but no "
+                    "replica holds a resident prefix (preload one first)"
+                )
+            return elig, len(elig) < len(self.replicas)
+        return list(self.replicas), False
+
+    def _rank(self, candidates: list[Replica],
+              advance_rr: bool = False) -> Replica:
+        """Base policy choice among ``candidates`` (never empty)."""
+        if self.policy == "round_robin":
+            n = len(self.replicas)
+            for k in range(n):
+                cand = self.replicas[(self._rr_next + k) % n]
+                if cand in candidates:
+                    if advance_rr:
+                        self._rr_next = (
+                            self.replicas.index(cand) + 1
+                        ) % n
+                    return cand
+            raise AssertionError("unreachable: candidates is non-empty")
+        return min(candidates,
+                   key=lambda rep: (rep.load_pages(), rep.replica_id))
+
+    def _backlog_open(self, reps: list[Replica]) -> list[Replica]:
+        if self.max_backlog is None:
+            return list(reps)
+        return [rep for rep in reps
+                if len(rep.scheduler.queue) < self.max_backlog]
+
+    def _place_one(self, req: Request) -> Replica | None:
+        """Choose a replica for ``req`` and commit it there, or return
+        ``None`` to keep it waiting in the global queue (backlog bound)."""
+        elig, constrained = self._eligible(req)
+        open_elig = self._backlog_open(elig)
+        if not open_elig:
+            if any(rep.scheduler.has_work for rep in self.replicas):
+                return None              # wait; retried next router step
+            open_elig = elig             # idle fleet: never park forever
+        if constrained:
+            # what the base policy would do with fork affinity ignored,
+            # under the SAME backlog conditions (else a backlog-diverted
+            # placement would masquerade as a declined migration).
+            # Read-only rank: the round-robin pointer does not advance.
+            free_pool = self._backlog_open(self.replicas) or open_elig
+            free_choice = self._rank(free_pool)
+            choice = self._rank(open_elig, advance_rr=True)
+            if free_choice.replica_id != choice.replica_id:
+                self.counters.inc("migrations_declined")
+        else:
+            choice = self._rank(open_elig, advance_rr=True)
+        choice.scheduler.submit(req)     # stamps arrival in replica time
+        choice.scheduler.counters.inc("router_placements")
+        self.counters.inc("placements")
+        self.counters.inc(f"placements_replica{choice.replica_id}")
+        self.counters.snapshot("place", (req.req_id, choice.replica_id))
+        return choice
+
+    def _place_pending(self) -> None:
+        while self.queue:
+            if self._place_one(self.queue[0]) is None:
+                break
+            self.queue.popleft()
+
+    # ------------------------------------------------------------------
+    # drive
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        self.step_i += 1
+        self._place_pending()
+        if self.queue:
+            # request-steps spent waiting in the global queue (every
+            # eligible replica at its backlog bound)
+            self.counters.inc("cross_replica_queue_waits", len(self.queue))
+        for rep in self.replicas:
+            if rep.scheduler.has_work:
+                rep.scheduler.step_plane()
+        # retirements may have opened slots/frames for deferred placements
+        self._place_pending()
+
+    def run(self, max_steps: int = 10_000) -> dict[int, Request]:
+        """Drive until every placed and pending request completes, or the
+        slowest still-busy replica's token-step clock reaches
+        ``max_steps`` (the same per-replica budget semantics as
+        ``Engine.run``: fused horizons advance a replica's clock in
+        token-steps)."""
+        while self.has_work and self._clock() < max_steps:
+            self.step()
+        return self.done
+
+    def _clock(self) -> int:
+        active = [rep.scheduler.step_i for rep in self.replicas
+                  if rep.scheduler.has_work]
+        if active:
+            return min(active)
+        return min(rep.scheduler.step_i for rep in self.replicas)
+
+    # ------------------------------------------------------------------
+    # accounting / invariants
+    # ------------------------------------------------------------------
+
+    def global_counters(self) -> collections.Counter:
+        """Router counters + the sum of every replica's counters.  The
+        cross-replica invariant the test suite asserts: each merged total
+        equals the sum of the per-replica values."""
+        merged = PerfCounters.merged(
+            rep.scheduler.counters for rep in self.replicas
+        )
+        merged.update(self.counters.counters)
+        return merged
+
+    def global_page_report(self) -> dict[str, int]:
+        """Fleet-wide page accounting — by construction the element-wise
+        sum of the per-replica reports (asserted in
+        :meth:`check_invariants`)."""
+        total = collections.Counter()
+        for rep in self.replicas:
+            total.update(rep.page_report())
+        return dict(total)
+
+    def check_invariants(self) -> None:
+        """Cross-replica conservation, checked from INDEPENDENT sources
+        (``global_page_report``/``global_counters`` are definitionally
+        per-replica sums, so comparing them against a re-computed sum
+        would be a tautology):
+
+        * every replica's vmem/pool is internally consistent and its
+          frame arithmetic closes (used + free == configured frames);
+        * request conservation: the router-side ``submitted`` counter
+          equals the number of request OBJECTS tracked across the global
+          queue and every replica's queued/running/swapped/done;
+        * placement accounting across planes: the router-incremented
+          ``placements``/``placements_replica{i}`` counters agree with
+          each other AND with the replica-side ``router_placements``
+          counters (incremented on the replica's own counter object);
+        * completion accounting: replica-summed ``completed`` /
+          ``failed_unreachable`` counters equal the done/failed statuses
+          carried by the merged ``done`` requests themselves.
+        """
+        for rep in self.replicas:
+            rep.scheduler.vmem.check_invariants()
+            pool = rep.scheduler.vmem.pool
+            if pool.num_used + pool.num_free != pool.num_pages:
+                raise AssertionError(
+                    f"replica {rep.replica_id} frame arithmetic broken: "
+                    f"{pool.num_used} used + {pool.num_free} free != "
+                    f"{pool.num_pages} frames"
+                )
+        tracked = len(self.queue) + sum(
+            rep.scheduler.state.num_tracked for rep in self.replicas
+        )
+        submitted = self.counters.get("submitted")
+        if tracked != submitted:
+            raise AssertionError(
+                f"request conservation broken: {submitted} submitted but "
+                f"{tracked} tracked across queue + replicas"
+            )
+        placed = sum(
+            self.counters.get(f"placements_replica{rep.replica_id}")
+            for rep in self.replicas
+        )
+        replica_side = sum(
+            rep.scheduler.counters.get("router_placements")
+            for rep in self.replicas
+        )
+        if not (placed == replica_side == self.counters.get("placements")):
+            raise AssertionError(
+                "placement accounting broken: per-replica counters "
+                f"{placed}, replica-side records {replica_side}, global "
+                f"{self.counters.get('placements')} disagree"
+            )
+        done = self.done
+        by_status = collections.Counter(r.status for r in done.values())
+        counted = PerfCounters.merged(
+            rep.scheduler.counters for rep in self.replicas
+        )
+        if counted["completed"] != by_status["done"] or \
+                counted["failed_unreachable"] != by_status["failed"]:
+            raise AssertionError(
+                f"completion accounting broken: counters say "
+                f"{counted['completed']} done / "
+                f"{counted['failed_unreachable']} failed, request objects "
+                f"say {by_status['done']} / {by_status['failed']}"
+            )
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "router": self.counters.report(),
+            "global_counters": dict(self.global_counters()),
+            "global_pages": self.global_page_report(),
+            "replicas": {
+                rep.replica_id: {
+                    "counters": dict(rep.scheduler.counters.counters),
+                    "pages": rep.page_report(),
+                    "step_i": rep.scheduler.step_i,
+                }
+                for rep in self.replicas
+            },
+        }

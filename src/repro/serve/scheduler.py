@@ -13,6 +13,13 @@ Data movement (KV page copies, prefill/decode dispatch) is delegated to a
 :class:`DataPlane` — in production the device-resident
 :class:`repro.serve.executor.Executor`; in tests the :class:`HostOnlyPlane`
 stub below.  The scheduler decides *what* moves; the plane decides *how*.
+
+All per-replica mutable scheduling state (queues, running set, swap
+records, the step clock, the resident-prefix length) is factored into
+:class:`ReplicaState`, so a multi-replica control plane
+(:class:`repro.serve.router.ReplicaRouter`) is N schedulers over N data
+planes with zero shared mutable state — the single-replica engine is
+exactly the N=1 instance of that layering.
 """
 
 from __future__ import annotations
@@ -62,6 +69,48 @@ class ServeConfig:
     #: horizon is rounded down to a power of two so the jit cache stays
     #: O(log max_horizon) entries.
     max_horizon: int = 8
+
+
+class RestoreFailure(RuntimeError):
+    """A data plane's restore transiently failed (device OOM, transfer
+    error, an injected fault).  The contract: the plane must raise BEFORE
+    any side effect (no pages re-mapped, no bytes moved), so the scheduler
+    can leave the victim at the head of the swap FIFO and retry on a later
+    step.  Counted as ``restore_failures``."""
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    """All per-replica mutable scheduling state, in one introspectable
+    object.
+
+    Factored out of :class:`Scheduler` so a multi-replica router can hold
+    N of these (one per data plane) and reason about them uniformly —
+    request conservation, page accounting, clock skew — while the
+    scheduler's policy methods stay exactly the single-replica code.  The
+    scheduler exposes the historical attribute names (``queue``,
+    ``running``, ``step_i``, ...) as properties over this object, so the
+    N=1 path is byte-for-byte the pre-router behavior.
+    """
+
+    replica_id: int = 0
+    queue: deque[Request] = dataclasses.field(default_factory=deque)
+    swapped: deque[int] = dataclasses.field(default_factory=deque)
+    running: dict[int, Request] = dataclasses.field(default_factory=dict)
+    done: dict[int, Request] = dataclasses.field(default_factory=dict)
+    slot_of: dict[int, int] = dataclasses.field(default_factory=dict)
+    swap_requests: dict[int, Request] = dataclasses.field(
+        default_factory=dict)
+    spilled_tokens: dict[int, int] = dataclasses.field(default_factory=dict)
+    step_i: int = 0
+    prefix_len: int = 0
+
+    @property
+    def num_tracked(self) -> int:
+        """Requests this replica currently accounts for (conservation
+        checks: submitted == queued + running + swapped + done)."""
+        return (len(self.queue) + len(self.running) + len(self.swapped)
+                + len(self.done))
 
 
 @dataclasses.dataclass
@@ -116,6 +165,24 @@ class DataPlane(Protocol):
         first sampled token per request (request order)."""
         ...
 
+    # -- compute surface (lets Scheduler.step_plane drive a full engine
+    # -- step against ANY plane: the Executor, a host stub, a fault fake)
+
+    def prefill(self, reqs: list[Request]) -> list[Any]:
+        """Batched prefill of freshly admitted requests; returns the first
+        sampled token per request (request order)."""
+        ...
+
+    def decode(self, tokens: np.ndarray, pre_lens: np.ndarray,
+               active: np.ndarray) -> np.ndarray:
+        """One full-slot decode step; returns sampled tokens by slot."""
+        ...
+
+    def decode_multi(self, plan: DecodePlan) -> np.ndarray:
+        """Fused K-step decode horizon; returns the ``[K, B, ...]`` token
+        block (step-major)."""
+        ...
+
 
 class HostOnlyPlane:
     """Data-plane stub: page-table bookkeeping only, no arrays.
@@ -148,6 +215,20 @@ class HostOnlyPlane:
             self.events.append(("admit_forked", req.req_id, start, tail))
         return [np.int32(0)] * len(reqs)
 
+    # compute surface: all-zero token streams, enough for step_plane loops
+
+    def prefill(self, reqs):
+        self.events.append(("prefill", [r.req_id for r in reqs]))
+        return [np.int32(0)] * len(reqs)
+
+    def decode(self, tokens, pre_lens, active):
+        self.events.append(("decode", int(active.sum())))
+        return np.zeros(np.shape(tokens), np.int32)
+
+    def decode_multi(self, plan):
+        self.events.append(("decode_multi", plan.horizon))
+        return np.zeros((plan.horizon,) + np.shape(plan.tokens), np.int32)
+
 
 class Scheduler:
     """Continuous-batching policy: queues, admission, preemption, forks.
@@ -160,27 +241,75 @@ class Scheduler:
 
     def __init__(self, cfg: ServeConfig, vmem: VirtualMemory,
                  cost: CostModel | None = None,
-                 counters: PerfCounters | None = None):
+                 counters: PerfCounters | None = None,
+                 replica_id: int = 0):
         self.cfg = cfg
         self.vmem = vmem
         self.cost = cost or CostModel()
         self.counters = counters or PerfCounters()
-        self.queue: deque[Request] = deque()
-        self.swapped: deque[int] = deque()
-        self.running: dict[int, Request] = {}    # req_id -> Request
-        self.done: dict[int, Request] = {}
-        self.slot_of: dict[int, int] = {}        # req_id -> device slot
-        self._swap_requests: dict[int, Request] = {}
-        self._spilled_tokens: dict[int, int] = {}  # req_id -> len at spill
-        self.step_i = 0
+        #: every piece of per-replica mutable scheduling state lives here
+        #: (the router holds N of these); the properties below keep the
+        #: historical single-replica attribute surface intact.
+        self.state = ReplicaState(replica_id=replica_id)
         #: shared-prefix ("system prompt") support: one resident sequence
         #: whose whole pages are refcount-shared into forked requests.
         self.PREFIX_ID = -1
-        self.prefix_len = 0
         self.plane: DataPlane | None = None
 
     def attach_plane(self, plane: DataPlane) -> None:
         self.plane = plane
+
+    # ------------------------------------------------------------------
+    # per-replica state (delegated to ReplicaState)
+    # ------------------------------------------------------------------
+
+    @property
+    def replica_id(self) -> int:
+        return self.state.replica_id
+
+    @property
+    def queue(self) -> deque[Request]:
+        return self.state.queue
+
+    @property
+    def swapped(self) -> deque[int]:
+        return self.state.swapped
+
+    @property
+    def running(self) -> dict[int, Request]:
+        return self.state.running
+
+    @property
+    def done(self) -> dict[int, Request]:
+        return self.state.done
+
+    @property
+    def slot_of(self) -> dict[int, int]:
+        return self.state.slot_of
+
+    @property
+    def _swap_requests(self) -> dict[int, Request]:
+        return self.state.swap_requests
+
+    @property
+    def _spilled_tokens(self) -> dict[int, int]:
+        return self.state.spilled_tokens
+
+    @property
+    def step_i(self) -> int:
+        return self.state.step_i
+
+    @step_i.setter
+    def step_i(self, v: int) -> None:
+        self.state.step_i = v
+
+    @property
+    def prefix_len(self) -> int:
+        return self.state.prefix_len
+
+    @prefix_len.setter
+    def prefix_len(self, v: int) -> None:
+        self.state.prefix_len = v
 
     # ------------------------------------------------------------------
     # queue API
@@ -204,6 +333,37 @@ class Scheduler:
             self.counters.inc(
                 "modeled_tick_cycles", self.cost.sched_tick_cycles
             )
+
+    def step_plane(self) -> None:
+        """One full engine step against the attached :class:`DataPlane`.
+
+        The canonical serving step — restore, admit (+prefill), plan a
+        fused horizon, decode, commit — factored out of ``Engine.step`` so
+        the single-replica engine, the multi-replica router and the fake-
+        plane test harnesses all drive the exact same loop.  Each replica
+        of a router runs this independently; nothing here reads any state
+        outside ``self``/the plane, which is what makes N replicas
+        trivially isolated.
+        """
+        self.begin_step()
+        self.try_restore()
+        admitted = self.admit()
+        if admitted:
+            first = self.plane.prefill(admitted)
+            self.finish_prefill(admitted, first)
+        # plan_decode picks a fused horizon K (1 under pool pressure or
+        # pending admissions/restores) and pre-faults every page K steps
+        # will touch in one batched allocation
+        plan = self.plan_decode()
+        if plan is not None:
+            if plan.horizon > 1:
+                block = self.plane.decode_multi(plan)
+                self.commit_decode(block, horizon=plan.horizon)
+            else:
+                sampled = self.plane.decode(
+                    plan.tokens, plan.pre_lens, plan.active
+                )
+                self.commit_decode(sampled)
 
     # ------------------------------------------------------------------
     # reach checks (livelock prevention)
@@ -280,9 +440,19 @@ class Scheduler:
                 break
             if not self.can_restore(req_id):
                 break
+            req = self._swap_requests[req_id]
+            try:
+                self.plane.restore(req, self._spilled_tokens[req_id])
+            except RestoreFailure:
+                # Transient data-plane failure, raised before any side
+                # effect (the RestoreFailure contract): leave the victim
+                # at the FIFO head and retry on a later step.
+                self.counters.inc("restore_failures")
+                self.counters.snapshot("restore_failure", req_id)
+                break
             self.swapped.popleft()
-            req = self._swap_requests.pop(req_id)
-            self.plane.restore(req, self._spilled_tokens.pop(req_id))
+            del self._swap_requests[req_id]
+            del self._spilled_tokens[req_id]
             req.status = "running"
             self.running[req_id] = req
             self.slot_of[req_id] = self.vmem.seq(req_id).slot

@@ -1,0 +1,298 @@
+"""Deterministic fault-schedule ``DataPlane`` fake for scheduler + router
+suites.
+
+:class:`FaultyDataPlane` implements the FULL
+:class:`repro.serve.scheduler.DataPlane` protocol — the movement surface
+(spill/restore/discard/fork) over a bare :class:`VirtualMemory`, like
+``HostOnlyPlane``, AND the compute surface (prefill/decode/decode_multi)
+that ``Scheduler.step_plane`` drives — plus a scripted fault schedule:
+
+  ``("hog", step, pages, duration)``
+      Seize up to ``pages`` free frames at ``step`` and hold them for
+      ``duration`` drive steps: transient memory pressure that induces
+      growth stalls, horizon collapses, blocked admissions and deferred
+      restores (all of which must degrade, never corrupt).
+  ``("force_spill", step, req_id)``
+      Preempt ``req_id`` through the scheduler's own spill path if it is
+      running at ``step`` (no-op otherwise).
+  ``("fail_restore", step, req_id, times)``
+      Arm the plane to raise :class:`RestoreFailure` for the next
+      ``times`` restore attempts of ``req_id`` from ``step`` on (the
+      transient data-plane failure the scheduler must retry, not crash
+      or drop).
+  ``("delay_done", step, req_id, times)``
+      Sugar: force-spill ``req_id`` at ``step`` and fail its next
+      ``times`` restores — the request completes late, permuting the
+      ``done`` order without changing any token stream.
+  ``("submit", step, request)``
+      Submit ``request`` to the attached scheduler at ``step`` (scripted
+      late arrivals; the router harness submits through the router
+      instead).
+
+**Token determinism is the harness's core trick**: every sampled token is
+``token_for(req_id, output_index)`` — a pure function of the request
+identity and position, independent of placement, batching, horizons,
+spills or faults.  A correct scheduler/router therefore produces
+*bit-identical per-request streams* under ANY replica count and ANY fault
+schedule, so the property suites can assert token identity against a
+single fault-free N=1 reference run (or the closed form) while faults
+scramble all the timing underneath.
+
+Counter mirroring: the plane increments the same accounting the real
+``Executor`` does (``host_syncs``, ``ptab_syncs``/``ptab_rows_uploaded``
+via real ``drain_dirty_rows`` draining, ``decode_dispatches``,
+``decode_horizon``, ``continuation_prefill_tokens``) on the scheduler's
+OWN counter object, so counter-invariant tests (monotonicity, N-replica
+totals = sum of per-replica values) run without a device.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PerfCounters, VirtualMemory, VMemConfig
+from repro.serve import (
+    Request,
+    RestoreFailure,
+    Scheduler,
+    ServeConfig,
+)
+
+
+def token_for(req_id: int, index: int) -> np.int32:
+    """The deterministic token stream: request identity x position only."""
+    return np.int32((req_id * 1009 + index * 101 + 7) % 32000)
+
+
+def expected_output(req: Request) -> list[int]:
+    """The closed-form stream a correct run must deliver for ``req``.
+
+    Seed semantics: retirement is checked AFTER the decode append, so
+    even a request already satisfied by its prefill token decodes once
+    more — the delivered length is ``max(2, max_new_tokens)``.
+    """
+    return [int(token_for(req.req_id, j))
+            for j in range(max(2, req.max_new_tokens))]
+
+
+class FaultyDataPlane:
+    """Fault-injecting, token-deterministic ``DataPlane`` fake."""
+
+    def __init__(self, vmem: VirtualMemory,
+                 counters: PerfCounters | None = None,
+                 schedule: tuple | list = ()):
+        self.vmem = vmem
+        self.counters = counters or PerfCounters()
+        self.sched: Scheduler | None = None
+        self.events: list[tuple] = []
+        self._schedule = sorted(schedule, key=lambda e: e[1])
+        self._fired = [False] * len(self._schedule)
+        self._hogs: list[tuple[int, list[int]]] = []   # (release_at, pages)
+        self._deny_restore: dict[int, int] = {}        # req_id -> times left
+        self._spilled_len: dict[int, int] = {}
+
+    def attach(self, sched: Scheduler) -> None:
+        """Bind the scheduler whose slots/outputs parametrize the token
+        streams (and whose counters this plane increments)."""
+        self.sched = sched
+        self.counters = sched.counters
+
+    # ------------------------------------------------------------------
+    # fault schedule
+    # ------------------------------------------------------------------
+
+    @property
+    def has_pending_submits(self) -> bool:
+        return any(ev[0] == "submit" and not f
+                   for ev, f in zip(self._schedule, self._fired))
+
+    def tick(self, step: int) -> None:
+        """Run the fault schedule for drive-loop iteration ``step`` (call
+        once per step, BEFORE ``step_plane`` — the position the old
+        hand-rolled test hooks occupied)."""
+        still = []
+        for release_at, pages in self._hogs:
+            if release_at <= step:
+                self.vmem.pool.free(pages)
+                self.events.append(("hog_release", len(pages)))
+            else:
+                still.append((release_at, pages))
+        self._hogs = still
+        for i, ev in enumerate(self._schedule):
+            if self._fired[i] or ev[1] > step:
+                continue
+            self._fired[i] = True
+            self._apply(ev, step)
+
+    def _apply(self, ev: tuple, step: int) -> None:
+        kind = ev[0]
+        if kind == "hog":
+            _, _, pages, duration = ev
+            n = min(pages, self.vmem.pool.num_free)
+            if n > 0:
+                held = self.vmem.pool.alloc(n)
+                self._hogs.append((step + duration, held))
+                self.events.append(("hog", n))
+        elif kind == "force_spill":
+            _, _, req_id = ev
+            if req_id in self.sched.running:
+                self.sched.spill(self.sched.running[req_id])
+                self.events.append(("forced_spill", req_id))
+        elif kind == "fail_restore":
+            _, _, req_id, times = ev
+            self._deny_restore[req_id] = (
+                self._deny_restore.get(req_id, 0) + times
+            )
+        elif kind == "delay_done":
+            _, _, req_id, times = ev
+            if req_id in self.sched.running:
+                self._deny_restore[req_id] = (
+                    self._deny_restore.get(req_id, 0) + times
+                )
+                self.sched.spill(self.sched.running[req_id])
+                self.events.append(("delay_done", req_id))
+        elif kind == "submit":
+            _, _, req = ev
+            self.sched.submit(req)
+            self.events.append(("scripted_submit", req.req_id))
+        else:
+            raise ValueError(f"unknown fault event {ev!r}")
+
+    # ------------------------------------------------------------------
+    # accounting shared with the real executor
+    # ------------------------------------------------------------------
+
+    def _sync(self) -> None:
+        """Mirror ``Executor.sync_page_table``: really drain the dirty
+        rows so ptab accounting matches the device plane's cadence."""
+        rows, _vals = self.vmem.drain_dirty_rows()
+        if rows.size:
+            self.counters.inc("ptab_rows_uploaded", int(rows.size))
+            self.counters.inc("ptab_syncs")
+
+    # ------------------------------------------------------------------
+    # movement surface (HostOnlyPlane-compatible event tuples)
+    # ------------------------------------------------------------------
+
+    def spill(self, req: Request) -> None:
+        self.events.append(("spill", req.req_id))
+        self._spilled_len[req.req_id] = self.vmem.seq_len(req.req_id)
+        self.vmem.spill_seq(req.req_id)
+
+    def restore(self, req: Request, num_tokens: int) -> None:
+        if self._deny_restore.get(req.req_id, 0) > 0:
+            # raised BEFORE any side effect (the RestoreFailure contract)
+            self._deny_restore[req.req_id] -= 1
+            self.events.append(("restore_failed", req.req_id))
+            raise RestoreFailure(f"injected restore failure: {req.req_id}")
+        assert num_tokens == self._spilled_len.pop(req.req_id)
+        self.events.append(("restore", req.req_id))
+        self.vmem.restore_seq(req.req_id, num_tokens)
+
+    def discard(self, req: Request) -> None:
+        self.events.append(("discard", req.req_id))
+        self._spilled_len.pop(req.req_id, None)
+
+    def admit_forked_batch(self, reqs, start_lens, tail_copies):
+        self._sync()
+        self.events.append(("admit_forked_batch", [r.req_id for r in reqs]))
+        for req, start, tail in zip(reqs, start_lens, tail_copies):
+            self.events.append(("admit_forked", req.req_id, start, tail))
+        self.counters.inc("host_syncs")
+        self.counters.inc(
+            "continuation_prefill_tokens", sum(len(r.prompt) for r in reqs)
+        )
+        return [token_for(r.req_id, 0) for r in reqs]
+
+    # ------------------------------------------------------------------
+    # compute surface (token_for streams)
+    # ------------------------------------------------------------------
+
+    def prefill(self, reqs):
+        self._sync()
+        self.events.append(("prefill", [r.req_id for r in reqs]))
+        self.counters.inc("host_syncs")
+        return [token_for(r.req_id, 0) for r in reqs]
+
+    def decode(self, tokens, pre_lens, active):
+        self._sync()
+        out = np.zeros(np.shape(tokens), np.int32)
+        for req_id, slot in self.sched.slot_of.items():
+            out[slot] = token_for(
+                req_id, len(self.sched.running[req_id].output)
+            )
+        self.counters.inc("host_syncs")
+        self.counters.inc("decode_dispatches")
+        self.counters.inc("decode_horizon")
+        return out
+
+    def decode_multi(self, plan):
+        self._sync()
+        block = np.zeros((plan.horizon,) + np.shape(plan.tokens), np.int32)
+        for req_id, slot in self.sched.slot_of.items():
+            j0 = len(self.sched.running[req_id].output)
+            for t in range(plan.horizon):
+                # rows past a lane's retirement are scratch, like the
+                # device block; the scheduler must never consume them
+                block[t][slot] = token_for(req_id, j0 + t)
+        self.counters.inc("host_syncs")
+        self.counters.inc("decode_dispatches")
+        self.counters.inc("decode_horizon", plan.horizon)
+        return block
+
+
+# ---------------------------------------------------------------------------
+# harness constructors / drivers
+# ---------------------------------------------------------------------------
+
+
+def make_replica(page_size=4, usable_pages=15, max_pages=8, max_batch=3,
+                 max_horizon=8, schedule=(), replica_id=0):
+    """A Scheduler wired to a FaultyDataPlane over a fresh vmem."""
+    cfg = ServeConfig(page_size=page_size, num_pages=usable_pages + 1,
+                      max_pages_per_seq=max_pages, max_batch=max_batch,
+                      max_horizon=max_horizon)
+    vmem = VirtualMemory(VMemConfig(
+        page_size=page_size, num_pages=usable_pages,
+        max_pages_per_seq=max_pages, max_seqs=max_batch,
+    ))
+    sched = Scheduler(cfg, vmem, replica_id=replica_id)
+    plane = FaultyDataPlane(vmem, schedule=schedule)
+    plane.attach(sched)
+    sched.attach_plane(plane)
+    return sched, plane
+
+
+def drive(sched, plane, max_steps=500):
+    """``Engine.run`` restated on a scheduler + fault plane: tick the
+    fault schedule, then run the canonical ``step_plane`` loop.  Returns
+    the number of drive iterations (== engine steps dispatched)."""
+    steps = 0
+    while (sched.has_work or plane.has_pending_submits) and \
+            sched.step_i < max_steps:
+        steps += 1
+        plane.tick(steps)
+        sched.step_plane()
+    return steps
+
+
+def drive_router(router, planes, max_steps=500, submits=()):
+    """``ReplicaRouter.run`` with per-replica fault schedules ticked in
+    drive-loop time (before each router step, mirroring ``drive``).
+
+    ``submits``: scripted late arrivals as ``(step, request)`` pairs,
+    delivered through ``router.submit`` so placement accounting holds
+    (plane-level ``submit`` events would bypass the router).
+    """
+    submits = sorted(submits, key=lambda e: e[0])
+    steps = 0
+    while (router.has_work or submits
+           or any(p.has_pending_submits for p in planes)) and \
+            steps < max_steps:
+        steps += 1
+        while submits and submits[0][0] <= steps:
+            router.submit(submits.pop(0)[1])
+        for plane in planes:
+            plane.tick(steps)
+        router.step()
+    return steps

@@ -56,6 +56,79 @@ class TestRiVECKernels:
             assert w.avg_vl >= 1, name
 
 
+class TestBenchRegressSections:
+    """The BENCH_serve.json regression gate compares like with like: the
+    trajectory interleaves ``serve`` and ``router`` records, and each
+    section must be gated against its OWN previous record (a serve record
+    compared against a router record would gate nothing — or the wrong
+    thing)."""
+
+    @pytest.fixture(scope="class")
+    def regress(self):
+        import importlib.util
+        import pathlib
+        path = (pathlib.Path(__file__).resolve().parent.parent
+                / "scripts" / "bench_regress.py")
+        spec = importlib.util.spec_from_file_location("bench_regress", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+
+    @staticmethod
+    def _serve_metrics(syncs):
+        return {"host_syncs_per_token": syncs, "mean_horizon": 3.0,
+                "sweep": {"auto": {"ptab_syncs_per_tok": syncs}}}
+
+    @staticmethod
+    def _router_metrics(syncs):
+        return {"host_syncs_per_token": syncs, "mean_horizon": 2.0,
+                "sweep": {"2": {"ptab_syncs_per_tok": syncs}}}
+
+    def _history(self, tmp_path, records):
+        import json
+        p = tmp_path / "BENCH_serve.json"
+        p.write_text(json.dumps(records))
+        return str(p)
+
+    def test_sections_compared_independently(self, regress, tmp_path,
+                                             capsys):
+        # serve improves while router regresses: only [router] must fail
+        path = self._history(tmp_path, [
+            {"t": "t0", "section": "serve",
+             "metrics": self._serve_metrics(0.5)},
+            {"t": "t1", "section": "router",
+             "metrics": self._router_metrics(0.3)},
+            {"t": "t2", "section": "serve",
+             "metrics": self._serve_metrics(0.4)},
+            {"t": "t3", "section": "router",
+             "metrics": self._router_metrics(0.9)},
+        ])
+        assert regress.main(["bench_regress", path]) == 1
+        out = capsys.readouterr().out
+        assert "[router] host_syncs_per_token regressed" in out
+        assert "[serve]" not in out
+
+    def test_untagged_legacy_records_read_as_serve(self, regress, tmp_path,
+                                                   capsys):
+        path = self._history(tmp_path, [
+            {"t": "t0", "metrics": self._serve_metrics(0.4)},   # legacy
+            {"t": "t1", "section": "serve",
+             "metrics": self._serve_metrics(0.6)},
+        ])
+        assert regress.main(["bench_regress", path]) == 1
+        assert "[serve] host_syncs_per_token regressed" in \
+            capsys.readouterr().out
+
+    def test_single_record_per_section_passes(self, regress, tmp_path):
+        path = self._history(tmp_path, [
+            {"t": "t0", "section": "serve",
+             "metrics": self._serve_metrics(0.4)},
+            {"t": "t1", "section": "router",
+             "metrics": self._router_metrics(0.3)},
+        ])
+        assert regress.main(["bench_regress", path]) == 0
+
+
 class TestCycleModel:
     def test_canneal_slower_than_scalar(self):
         _, w = KERNELS["canneal"]("simtiny")

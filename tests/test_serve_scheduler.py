@@ -274,58 +274,6 @@ class TestReachChecks:
         assert sched.vmem.num_seqs == 1             # fork never mapped
         sched.vmem.check_invariants()
 
-    def test_restore_unreachable_victim_fails_instead_of_livelock(self):
-        """The ROADMAP livelock: restore re-maps WITHOUT prefix sharing, so
-        a fork spilled near the end of its decode needs more frames than
-        preemption can ever free next to the pinned prefix — pre-fix the
-        swap-queue head spun until max_steps."""
-        # page 4, 9 usable frames, prefix 5 tokens (2 pinned) -> 7
-        # attainable = 28 tokens; A's mapped lifetime 5+12+14=31 -> 8
-        # pages unshared (> 7) but only 7 own while sharing (admissible)
-        sched, plane = self._with_prefix(plen=5, usable_pages=9, max_pages=16,
-                                         max_batch=3)
-        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
-        state = {"submitted": False}
-
-        def late_pressure(s, _step):
-            a = s.running.get(0)
-            if a is not None and a.remaining == 1 and not state["submitted"]:
-                state["submitted"] = True
-                s.submit(req(1, plen=8, max_new=4))   # forces the spill
-        steps = drive(sched, max_steps=200, hook=late_pressure)
-        assert steps < 200 and not sched.has_work    # no livelock
-        assert sched.done[0].status == "failed"
-        assert sched.done[1].status == "done"
-        assert sched.counters.get("preemptions") == 1
-        assert sched.counters.get("failed_unreachable") == 1
-        # the plane was told to drop the dead swap record
-        assert ("discard", 0) in plane.events
-        sched.vmem.check_invariants()
-
-    def test_grow_stall_after_unshared_restore_still_terminates(self):
-        """A spilled EARLY restores fine (small footprint) but, unshared,
-        can no longer grow to its full lifetime next to the pinned prefix.
-        Growth stalls are degraded, not deadlocked (decode proceeds with
-        scratch-routed writes, seed semantics) — the run must terminate
-        without tripping the reach checks."""
-        sched, _ = self._with_prefix(plen=5, usable_pages=9, max_pages=16,
-                                     max_batch=3)
-        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
-        state = {"submitted": False}
-
-        def early_pressure(s, step):
-            if step == 3 and not state["submitted"]:
-                state["submitted"] = True
-                s.submit(req(1, plen=16, max_new=4))  # forces an early spill
-        steps = drive(sched, max_steps=200, hook=early_pressure)
-        assert steps < 200 and not sched.has_work
-        assert sched.counters.get("preemptions") == 1
-        assert sched.counters.get("restores") == 1   # it DID come back
-        assert sched.counters.get("failed_unreachable") == 0
-        assert sched.done[0].status == "done"
-        assert sched.done[1].status == "done"
-        sched.vmem.check_invariants()
-
     def test_page_boundary_request_is_not_spuriously_failed(self):
         # plen 9, max_new 8: only 16 tokens are ever MAPPED (the final
         # sampled token retires unmapped), which fits 2 pages exactly —
@@ -358,6 +306,118 @@ class TestReachChecks:
         assert sched.counters.get("failed_unreachable") == 0
         assert all(r.status == "done" for r in sched.done.values())
         assert len(sched.done) == 16
+        sched.vmem.check_invariants()
+
+
+class TestFaultPlaneLivelockPorts:
+    """The two reach-check livelock regressions, ported from hand-rolled
+    ``drive(hook=...)`` loops onto the shared fault-injection harness
+    (``tests/_fault_plane.py``): scripted ``submit`` events replace the
+    stateful hooks, and the canonical ``Scheduler.step_plane`` loop —
+    the same one the engine and the multi-replica router drive — replaces
+    the bespoke step sequence.  ``max_horizon=1`` keeps one token-step
+    per drive step, so the scripted event steps line up with the original
+    hook arithmetic."""
+
+    def _forked_replica(self, schedule):
+        from _fault_plane import make_replica
+        sched, plane = make_replica(page_size=4, usable_pages=9,
+                                    max_pages=16, max_batch=3,
+                                    max_horizon=1, schedule=schedule)
+        sched.vmem.map_seq(sched.PREFIX_ID, 5)
+        sched.prefix_len = 5
+        return sched, plane
+
+    def test_restore_unreachable_victim_fails_instead_of_livelock(self):
+        """The ROADMAP livelock: restore re-maps WITHOUT prefix sharing, so
+        a fork spilled near the end of its decode needs more frames than
+        preemption can ever free next to the pinned prefix — pre-fix the
+        swap-queue head spun until max_steps.  Req 0's remaining hits 1
+        just before step 14 (output = step + 1), so the scripted late
+        arrival forces the spill at exactly the old hook's step."""
+        from _fault_plane import drive
+        sched, plane = self._forked_replica(
+            (("submit", 14, req(1, plen=8, max_new=4)),)
+        )
+        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work    # no livelock
+        assert sched.done[0].status == "failed"
+        assert sched.done[1].status == "done"
+        assert sched.counters.get("preemptions") == 1
+        assert sched.counters.get("failed_unreachable") == 1
+        # the plane was told to drop the dead swap record
+        assert ("discard", 0) in plane.events
+        sched.vmem.check_invariants()
+
+    def test_grow_stall_after_unshared_restore_still_terminates(self):
+        """A spilled EARLY restores fine (small footprint) but, unshared,
+        can no longer grow to its full lifetime next to the pinned prefix.
+        Growth stalls are degraded, not deadlocked (decode proceeds with
+        scratch-routed writes, seed semantics) — the run must terminate
+        without tripping the reach checks."""
+        from _fault_plane import drive
+        sched, plane = self._forked_replica(
+            (("submit", 3, req(1, plen=16, max_new=4)),)
+        )
+        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("preemptions") == 1
+        assert sched.counters.get("restores") == 1   # it DID come back
+        assert sched.counters.get("failed_unreachable") == 0
+        assert sched.done[0].status == "done"
+        assert sched.done[1].status == "done"
+        sched.vmem.check_invariants()
+
+
+class TestRestoreFailureHandling:
+    """Transient data-plane restore failures (``RestoreFailure``): the
+    scheduler must retry from the unchanged swap-queue head — never crash,
+    drop the victim, or reorder the FIFO."""
+
+    def _replica(self, schedule, usable_pages=4, max_batch=2):
+        from _fault_plane import make_replica
+        return make_replica(page_size=4, usable_pages=usable_pages,
+                            max_pages=8, max_batch=max_batch,
+                            max_horizon=1, schedule=schedule)
+
+    def test_transient_failure_is_retried_until_it_clears(self):
+        from _fault_plane import drive, expected_output
+        sched, plane = self._replica(
+            (("force_spill", 2, 0), ("fail_restore", 1, 0, 2)),
+        )
+        r = req(0, plen=6, max_new=6)
+        sched.submit(req(0, plen=6, max_new=6))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("restore_failures") == 2
+        assert sched.counters.get("restores") == 1
+        assert sched.done[0].status == "done"
+        # the injected failures delayed, never corrupted, the stream
+        assert [int(x) for x in sched.done[0].output] == expected_output(r)
+        assert plane.events.count(("restore_failed", 0)) == 2
+        sched.vmem.check_invariants()
+
+    def test_failed_head_blocks_but_never_reorders_the_fifo(self):
+        from _fault_plane import drive
+        sched, plane = self._replica(
+            (("force_spill", 2, 0), ("force_spill", 2, 1),
+             ("fail_restore", 1, 0, 3)),
+            usable_pages=6,
+        )
+        for i in range(2):
+            sched.submit(req(i, plen=6, max_new=8))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("restore_failures") == 3
+        # FIFO preserved: 1 restores only after the failing head 0 clears
+        # (later pool pressure may spill/restore 1 again; only the order
+        # of the FIRST restores is the FIFO claim)
+        restores = [e for e in plane.events if e[0] == "restore"]
+        assert restores[0] == ("restore", 0)
+        assert ("restore", 1) in restores
+        assert all(r.status == "done" for r in sched.done.values())
         sched.vmem.check_invariants()
 
 

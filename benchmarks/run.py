@@ -26,21 +26,23 @@ Four sections double as CI gates when explicitly selected:
     K=1 decode already syncs less than once per token, so the sync ratio
     alone cannot detect the horizon silently regressing to K=1);
   * ``--only sharded`` exits nonzero unless the mesh-sharded executor is
-    token-identical to the single-device executor AND the scheduler
-    counters (host/ptab syncs per token, mean horizon, preemptions,
-    restores) are unchanged — sharding the data plane must be invisible
-    to the policy plane.  Multi-device coverage needs
+    token-identical to the single-device KERNEL executor with the Pallas
+    kernels LIVE (``kernel_dispatches > 0`` and ``ref_path_dispatches ==
+    0`` — the jnp twin is reserved for the explicit ``--no-kernels``
+    hatch), the scheduler counters are unchanged, AND the sharded kernel
+    path gathers strictly fewer continuation-prefill KV bytes than the
+    ref-path baseline engine.  Multi-device coverage needs
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
     ``multidevice`` job); with one device the mesh degrades to 1x1 and
-    the gate still checks the sharded code path;
+    the gate still checks the kernel dispatch path;
   * ``--only router`` exits nonzero unless the replica sweep (a
     ReplicaRouter over N in {1,2,4} engines) is per-request
     token-identical to the N=1 reference AND the router's global
     page/counter accounting equals the sum of the per-replica
     accounting.
 
-The serve and router sections also append their metrics (tagged with a
-``section`` field) to ``BENCH_serve.json`` at the repo root — the
+The serve, sharded and router sections also append their metrics (tagged
+with a ``section`` field) to ``BENCH_serve.json`` at the repo root — the
 machine-readable perf trajectory across PRs, which
 ``scripts/bench_regress.py`` gates on per section (counters only, never
 tok/s).
@@ -132,15 +134,29 @@ def _serve(gate: bool = False):
 def _sharded(gate: bool = False):
     from benchmarks import bench_serve_sharded
     csv, metrics = bench_serve_sharded.run()
+    _record_serve_trajectory(metrics, section="sharded")
     failures = []
     if not metrics["token_identical"]:
         failures.append(
             f"sharded executor ({metrics['mesh_devices']} mesh devices) "
-            "diverged from the single-device token stream")
+            "diverged from the single-device kernel token stream")
     if not metrics["counters_identical"]:
         failures.append(
             "scheduler counters changed under sharding — the data-plane "
             "layout leaked into policy decisions")
+    if not metrics["kernels_live"]:
+        failures.append(
+            f"kernels not live on the mesh: kernel_dispatches="
+            f"{metrics['kernel_dispatches']}, ref_path_dispatches="
+            f"{metrics['ref_path_dispatches']} (every compute step must "
+            "dispatch the Pallas kernels through shard_map; the jnp twin "
+            "is reserved for the explicit --no-kernels hatch)")
+    if not metrics["bytes_win"]:
+        failures.append(
+            f"continuation prefill gathered "
+            f"{metrics['prefill_bytes_gathered_kernel']} B on the kernel "
+            f"path vs {metrics['prefill_bytes_gathered_ref']} B on the ref "
+            "path — the sharded kernel must gather strictly fewer KV bytes")
     for f in failures:
         print(f"FAIL: {f}")
     if failures and gate:          # --only sharded: act as a CI gate

@@ -33,9 +33,9 @@ REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
 #: per-section (name, extractor, direction): "le" = new must stay <=
 #: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
-#: ``serve`` and ``router`` gates (tagged with a "section" field;
-#: untagged legacy records are ``serve``), so each section is compared
-#: against its OWN previous record — never serve-vs-router.
+#: ``serve``, ``sharded`` and ``router`` gates (tagged with a "section"
+#: field; untagged legacy records are ``serve``), so each section is
+#: compared against its OWN previous record — never serve-vs-router.
 CHECKS_BY_SECTION = {
     "serve": (
         ("host_syncs_per_token",
@@ -52,6 +52,18 @@ CHECKS_BY_SECTION = {
          lambda m: float(m["sweep"]["2"]["ptab_syncs_per_tok"]), "le"),
         ("mean_horizon",
          lambda m: float(m["mean_horizon"]), "ge"),
+    ),
+    # the sharded gate: the kernel path's modeled continuation-prefill KV
+    # gather volume must never creep back toward the ref path's, no step
+    # may slip back onto the jnp twin, and the kernel dispatch count is an
+    # exact event count (same workload = same value in both directions)
+    "sharded": (
+        ("prefill_bytes_gathered",
+         lambda m: float(m["prefill_bytes_gathered_kernel"]), "le"),
+        ("ref_path_dispatches",
+         lambda m: float(m["ref_path_dispatches"]), "le"),
+        ("kernel_dispatches",
+         lambda m: float(m["kernel_dispatches"]), "ge"),
     ),
 }
 

@@ -9,9 +9,13 @@
 #      sweep gate (`--only router`: token identity vs N=1 + global-vs-
 #      per-replica accounting) + the counter-based regression gate
 #      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
-#   5. IF >1 host device is advertised: the `sharded` pytest subset
-#      (including the router-over-sharded-executors tests) and the
-#      sharded-executor parity gate.
+#   5. IF >1 host device is advertised: the sharded-kernel differential
+#      subset first (fail fast if a shard_map wrapper diverges from the
+#      single-device kernel / jnp oracle), then the full `sharded` pytest
+#      subset (including the router-over-sharded-executors tests) and the
+#      sharded-executor gate (kernels LIVE on the mesh: token identity,
+#      ref_path_dispatches == 0, strict prefill bytes-gathered win vs the
+#      jnp ref-path baseline).
 # The full gate (including sharding dry-runs) stays:
 #   PYTHONPATH=src python -m pytest -q
 #
@@ -71,9 +75,11 @@ print(jax.device_count())
 PY
 )
 if [ "$ndev" -gt 1 ]; then
-  echo "== sharded serving tests ($ndev XLA devices)"
-  python -m pytest -q -m sharded "$@"
-  echo "== sharded executor parity gate"
+  echo "== sharded kernel differentials ($ndev XLA devices; fail fast)"
+  python -m pytest -q -x -m "sharded and kernels" "$@"
+  echo "== sharded serving tests"
+  python -m pytest -q -m "sharded and not kernels" "$@"
+  echo "== sharded executor gate (kernels live on the mesh)"
   python -m benchmarks.run --only sharded
 else
   echo "== sharded stage skipped (single host device; set XLA_FLAGS=--xla_force_host_platform_device_count=8)"

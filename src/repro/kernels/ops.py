@@ -8,13 +8,35 @@ jnp oracle (``use_kernel=False`` — the XLA-native path used by dry-runs).
 
 The Pallas kernels assume a single device's pool view (scalar-prefetched
 page tables index local frames; no partitioning annotations), so they must
-not be traced into a computation laid out over a >1-device mesh.  That
-guard lives where the mesh does: the sharded serving executor swaps in a
-ref-path twin of its model (``serve.executor._ref_path_model``) so every
-wrapper here receives ``use_kernel=False`` under a multi-device mesh and
-GSPMD partitions the jnp paths freely — while single-device callers (the
-kernel differential grids, engines without a mesh) keep the kernel paths
-live regardless of how many devices the process can see.
+not be traced BARE into a computation laid out over a >1-device mesh.  On
+a ('kv', 'hd') serve mesh the ``*_sharded`` wrappers below close that gap
+with ``shard_map``: each device runs the unmodified single-device kernel
+on exactly its local slice of the KV pools, with per-operand specs derived
+from ``launch.mesh.kv_partition_axes`` (the same degradation rule as the
+executor's committed pool layout, so the shard a kernel sees IS the shard
+the executor placed there):
+
+  * pools ``[P, page, Hkv, hd]`` shard ``P(None, None, kv, hd)``;
+  * the page table and every scalar-prefetch operand (lens/starts/
+    seq_lens) pass through replicated — the satp analogue every shard
+    reads coherently, so page-table translation needs no communication;
+  * KV-head ('kv') sharding is embarrassingly parallel: paged attention
+    runs an independent online softmax per KV head, so each device
+    attends its local heads end to end and the outputs merely concatenate
+    along Hkv — no cross-shard reduction, no collective;
+  * head_dim ('hd') sharding cuts the QK contraction axis, so the paged
+    attention bodies ``all_gather`` K/V pool slices to full head_dim
+    (tiled, one concat-sized collective per call) and then claim the
+    replicated output every shard computed identically.  The paged copies
+    never contract: they stay collective-free even under 'hd'.
+
+The sharded serving executor dispatches through a mesh-bound model twin
+(``serve.executor._mesh_kernel_model``) that routes the serve-path ops to
+these wrappers, so the kernels stay LIVE under a multi-device mesh; the
+old jnp ref-path twin survives only as the explicit ``--no-kernels``
+escape hatch, counted by ``ref_path_dispatches``.  Single-device callers
+(the kernel differential grids, engines without a mesh) keep the plain
+kernel paths regardless of how many devices the process can see.
 """
 
 from __future__ import annotations
@@ -257,6 +279,249 @@ def paged_gather_coalesced(
     )
     inverse = jnp.argsort(order)
     return gathered[inverse]
+
+
+# ---------------------------------------------------------------------------
+# shard_map kernel dispatch over a ('kv', 'hd') serve mesh
+#
+# Natural-layout (4-D pool) entry points: the serve paths keep pools as
+# [P, page, Hkv, hd] and K/V activations as [B, S, Hkv, hd] all the way to
+# the shard_map boundary, because a (kv, hd)-sharded 4-D pool flattened to
+# the kernels' merged [P, page, W=Hkv*hd] layout is NOT expressible as a
+# PartitionSpec on W (the per-device slice is strided).  The merge to W
+# happens INSIDE the shard body, on the local slice, where it is a plain
+# local reshape.
+# ---------------------------------------------------------------------------
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across JAX versions, replication checks off.
+
+    The bodies below contain Pallas calls (opaque to the replication
+    checker) and claim replicated outputs the checker cannot verify, so
+    the check is disabled — correctness of the claimed specs is what the
+    sharded differential grids (tests/test_kernels_sharded.py) pin down.
+    """
+    try:
+        from jax.experimental.shard_map import shard_map
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except (ImportError, TypeError):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+
+def _kv_axes(mesh, num_kv_heads: int, head_dim: int):
+    # deferred import: repro.launch.__init__ -> launch.mesh only (light),
+    # and only sharded callers ever need it
+    from repro.launch.mesh import kv_partition_axes
+    return kv_partition_axes(mesh, num_kv_heads, head_dim)
+
+
+def paged_copy_sharded(
+    src: jax.Array,          # [B, S, Hkv, hd]
+    pool: jax.Array,         # [P, page, Hkv, hd]
+    page_table: jax.Array,   # [B, max_pages] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    page_size: int,
+    mesh,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """:func:`paged_copy` with each device bursting into its pool slice.
+
+    Specs: src/pool ``P(None, None, kv, hd)``, page table + lens
+    replicated.  A copy never mixes heads or head_dim lanes, so both mesh
+    axes are embarrassingly parallel — no collective on any axis.
+    """
+    if mesh is None or mesh.size == 1:
+        b, s, hkv, hd = src.shape
+        return paged_copy(
+            src.reshape(b, s, hkv * hd),
+            pool.reshape(pool.shape[0], page_size, hkv * hd),
+            page_table, lens, page_size=page_size, use_kernel=use_kernel,
+        ).reshape(pool.shape)
+    kv_ax, hd_ax = _kv_axes(mesh, src.shape[2], src.shape[3])
+    spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
+    rep = jax.sharding.PartitionSpec()
+
+    def body(src_l, pool_l, pt, ln):
+        b, s, hk, dd = src_l.shape
+        out = paged_copy(
+            src_l.reshape(b, s, hk * dd),
+            pool_l.reshape(pool_l.shape[0], page_size, hk * dd),
+            pt, ln, page_size=page_size, use_kernel=use_kernel,
+        )
+        return out.reshape(pool_l.shape)
+
+    return _shard_map(body, mesh, (spec, spec, rep, rep), spec)(
+        src, pool, page_table, lens
+    )
+
+
+def paged_copy_at_sharded(
+    src: jax.Array,          # [B, S, Hkv, hd]
+    pool: jax.Array,         # [P, page, Hkv, hd]
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32
+    lens: jax.Array,         # [B] int32
+    *,
+    page_size: int,
+    mesh,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """:func:`paged_copy_at` over the mesh (same specs as
+    :func:`paged_copy_sharded`; offsets live on the replicated scalar
+    plane, so the shard bodies burst independently)."""
+    if mesh is None or mesh.size == 1:
+        b, s, hkv, hd = src.shape
+        return paged_copy_at(
+            src.reshape(b, s, hkv * hd),
+            pool.reshape(pool.shape[0], page_size, hkv * hd),
+            page_table, starts, lens,
+            page_size=page_size, use_kernel=use_kernel,
+        ).reshape(pool.shape)
+    kv_ax, hd_ax = _kv_axes(mesh, src.shape[2], src.shape[3])
+    spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
+    rep = jax.sharding.PartitionSpec()
+
+    def body(src_l, pool_l, pt, st, ln):
+        b, s, hk, dd = src_l.shape
+        out = paged_copy_at(
+            src_l.reshape(b, s, hk * dd),
+            pool_l.reshape(pool_l.shape[0], page_size, hk * dd),
+            pt, st, ln, page_size=page_size, use_kernel=use_kernel,
+        )
+        return out.reshape(pool_l.shape)
+
+    return _shard_map(body, mesh, (spec, spec, rep, rep, rep), spec)(
+        src, pool, page_table, starts, lens
+    )
+
+
+def paged_decode_attention_sharded(
+    q: jax.Array,            # [B, Hkv, G, D]
+    k_pool: jax.Array,       # [P, page, Hkv, D]
+    v_pool: jax.Array,       # [P, page, Hkv, D]
+    page_table: jax.Array,   # [B, max_pages] int32
+    seq_lens: jax.Array,     # [B] int32
+    *,
+    page_size: int,
+    mesh,
+    scale: float | None = None,
+    window: int | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """:func:`paged_decode_attention` with per-device local-slice kernels.
+
+    'kv' shards Hkv on q AND the pools — the per-head online softmax makes
+    each device's heads fully independent (no collective; outputs
+    concatenate along Hkv via the out spec).  'hd' shards only the pools:
+    it cuts the QK contraction, so the body all-gathers K/V to full
+    head_dim and every 'hd' shard computes the identical (replicated)
+    output.  q and the output stay replicated over 'hd'.
+    """
+    if mesh is None or mesh.size == 1:
+        return paged_decode_attention(
+            q, k_pool, v_pool, page_table, seq_lens, page_size=page_size,
+            scale=scale, window=window, use_kernel=use_kernel,
+        )
+    kv_ax, hd_ax = _kv_axes(mesh, q.shape[1], q.shape[3])
+    pool_spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
+    q_spec = jax.sharding.PartitionSpec(None, kv_ax, None, None)
+    rep = jax.sharding.PartitionSpec()
+    gather_hd = hd_ax is not None and mesh.shape[hd_ax] > 1
+
+    def body(q_l, kp_l, vp_l, pt, ln):
+        if gather_hd:
+            kp_l = jax.lax.all_gather(kp_l, hd_ax, axis=-1, tiled=True)
+            vp_l = jax.lax.all_gather(vp_l, hd_ax, axis=-1, tiled=True)
+        return paged_decode_attention(
+            q_l, kp_l, vp_l, pt, ln, page_size=page_size,
+            scale=scale, window=window, use_kernel=use_kernel,
+        )
+
+    return _shard_map(
+        body, mesh, (q_spec, pool_spec, pool_spec, rep, rep), q_spec
+    )(q, k_pool, v_pool, page_table, seq_lens)
+
+
+def paged_prefill_attention_sharded(
+    q: jax.Array,            # [B, S, Hkv, G, D]
+    k_pool: jax.Array,       # [P, page, Hkv, D]
+    v_pool: jax.Array,       # [P, page, Hkv, D]
+    page_table: jax.Array,   # [B, max_pages] int32
+    starts: jax.Array,       # [B] int32
+    *,
+    page_size: int,
+    mesh,
+    scale: float | None = None,
+    bq: int = 32,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """:func:`paged_prefill_attention` over the mesh (same axis roles as
+    :func:`paged_decode_attention_sharded`: 'kv' head-parallel with no
+    collective, 'hd' all-gathers K/V pool slices to full head_dim and
+    claims the replicated output).  The page-streaming win — touching only
+    reachable pages per query block — is per (batch row, KV head, query
+    block), so it survives sharding untouched."""
+    if mesh is None or mesh.size == 1:
+        return paged_prefill_attention(
+            q, k_pool, v_pool, page_table, starts, page_size=page_size,
+            scale=scale, bq=bq, use_kernel=use_kernel,
+        )
+    kv_ax, hd_ax = _kv_axes(mesh, q.shape[2], q.shape[4])
+    pool_spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
+    q_spec = jax.sharding.PartitionSpec(None, None, kv_ax, None, None)
+    rep = jax.sharding.PartitionSpec()
+    gather_hd = hd_ax is not None and mesh.shape[hd_ax] > 1
+
+    def body(q_l, kp_l, vp_l, pt, st):
+        if gather_hd:
+            kp_l = jax.lax.all_gather(kp_l, hd_ax, axis=-1, tiled=True)
+            vp_l = jax.lax.all_gather(vp_l, hd_ax, axis=-1, tiled=True)
+        return paged_prefill_attention(
+            q_l, kp_l, vp_l, pt, st, page_size=page_size,
+            scale=scale, bq=bq, use_kernel=use_kernel,
+        )
+
+    return _shard_map(
+        body, mesh, (q_spec, pool_spec, pool_spec, rep, rep), q_spec
+    )(q, k_pool, v_pool, page_table, starts)
+
+
+def flash_attention_sharded(
+    q: jax.Array,            # [B, Hq, S, D]   (Hq = Hkv * G, kv-major)
+    k: jax.Array,            # [B, Hkv, S, D]
+    v: jax.Array,            # [B, Hkv, S, D]
+    *,
+    mesh,
+    causal: bool = True,
+    scale: float | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """:func:`flash_attention` with heads sharded over 'kv'.
+
+    The prefill chunk attention is not paged, but under a mesh it must
+    still not trace a bare Pallas call into the GSPMD computation.  Q
+    heads are kv-major (``q.reshape(b, s, Hkv, G, d)`` elsewhere), so
+    sharding Hq over 'kv' keeps each device's query heads aligned with its
+    KV heads — head-parallel, no collective.  D is the contraction axis
+    and stays unsharded; every 'hd' shard computes the identical output
+    (claimed replicated)."""
+    if mesh is None or mesh.size == 1:
+        return flash_attention(
+            q, k, v, causal=causal, scale=scale, use_kernel=use_kernel
+        )
+    kv_ax, _ = _kv_axes(mesh, k.shape[1], q.shape[3])
+    spec = jax.sharding.PartitionSpec(None, kv_ax, None, None)
+
+    def body(q_l, k_l, v_l):
+        return flash_attention(
+            q_l, k_l, v_l, causal=causal, scale=scale, use_kernel=use_kernel
+        )
+
+    return _shard_map(body, mesh, (spec, spec, spec), spec)(q, k, v)
 
 
 # ---------------------------------------------------------------------------

@@ -123,6 +123,28 @@ def make_host_serve_mesh(
     return _mk((kv, hd), ("kv", "hd"))
 
 
+def kv_partition_axes(
+    mesh: jax.sharding.Mesh, num_kv_heads: int, head_dim: int,
+) -> tuple[str | None, str | None]:
+    """Per-dim mesh axes ``(kv_axis, hd_axis)`` for KV-shaped operands.
+
+    THE single source of truth for how (Hkv, head_dim) dims map onto a
+    ('kv', 'hd') serve mesh: an axis is used only when it exists on the
+    mesh AND its extent divides the dim; otherwise that dim degrades to
+    replicated (``None``).  ``launch.specs.executor_state_shardings``
+    (the executor's persistent-state layout) and the shard_map kernel
+    dispatch wrappers in ``kernels.ops`` both derive their specs from
+    this, so the per-device pool slice a Pallas kernel sees is by
+    construction the same slice the executor committed.
+    """
+    def ok(dim: int, ax: str) -> str | None:
+        if ax not in mesh.axis_names or dim % mesh.shape[ax]:
+            return None
+        return ax
+
+    return ok(num_kv_heads, "kv"), ok(head_dim, "hd")
+
+
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh: ('pod', 'data') or ('data',)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -51,7 +51,13 @@ def main() -> None:
                          "(force some on CPU with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8), an "
                          "integer caps the device count, 'off' (default) "
-                         "keeps single-device placement")
+                         "keeps single-device placement; Pallas kernels "
+                         "stay LIVE on the mesh via shard_map")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="explicit escape hatch: dispatch every compute "
+                         "step through the jnp reference twin instead of "
+                         "the Pallas kernels (counted as "
+                         "ref_path_dispatches in the final stats)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -60,7 +66,10 @@ def main() -> None:
             f"{args.arch}: engine drives paged-KV transformers; recurrent "
             "families decode via model.decode_step (see examples/)"
         )
-    model = build_model(cfg, remat=False)
+    # kernels are the default serving path everywhere (single device AND
+    # mesh); --no-kernels flips the executor onto the jnp twin instead of
+    # rebuilding a kernel-free model, so the hatch is visible in counters
+    model = build_model(cfg, remat=False, use_kernels=True)
     params = model.init(jax.random.PRNGKey(args.seed))
     mesh = None
     if args.serve_mesh != "off":
@@ -78,6 +87,7 @@ def main() -> None:
         ),
         max_batch=args.max_batch,
         max_horizon=args.max_horizon,
+        use_ref_path=args.no_kernels,
     )
     engines = [Engine(model, params, serve_cfg, mesh=mesh)
                for _ in range(max(1, args.replicas))]
@@ -140,6 +150,10 @@ def main() -> None:
           f"{eng.scheduler.step_i} steps "
           f"(seed engine: {eng.scheduler.step_i * eng.cfg.max_batch} rows)")
     c = eng.counters
+    print(f"  kernel dispatch: {c.get('kernel_dispatches')} kernel / "
+          f"{c.get('ref_path_dispatches')} ref-path compute steps, "
+          f"{c.get('prefill_bytes_gathered')} B continuation-prefill KV "
+          f"gathered")
     print(f"  fused decode horizon: mean "
           f"{c.get('decode_horizon') / max(c.get('decode_dispatches'), 1):.2f}"
           f" over {c.get('decode_dispatches')} dispatches, "

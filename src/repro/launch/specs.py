@@ -203,15 +203,17 @@ def executor_state_shardings(mesh, num_kv_heads: int, head_dim: int) -> dict:
     dim does not divide the mesh extent — while the page table, token /
     position operands and sampled-token outputs replicate: they are the
     satp analogue every shard must read coherently.
-    """
-    def ok(dim: int, ax: str):
-        if ax not in mesh.axis_names or dim % mesh.shape[ax]:
-            return None
-        return ax
 
+    The per-dim axis choice is delegated to
+    :func:`repro.launch.mesh.kv_partition_axes` so the shard_map kernel
+    dispatch in ``kernels.ops`` (which must hand each device exactly its
+    committed pool slice) can never disagree with the executor layout.
+    """
+    from repro.launch.mesh import kv_partition_axes
+
+    kv_ax, hd_ax = kv_partition_axes(mesh, num_kv_heads, head_dim)
     return {
-        "pool": _ns(mesh, None, None, None, ok(num_kv_heads, "kv"),
-                    ok(head_dim, "hd")),
+        "pool": _ns(mesh, None, None, None, kv_ax, hd_ax),
         "replicated": _ns(mesh),
     }
 

@@ -64,10 +64,17 @@ class TransformerLM:
         moe_dispatch: str = "sorted",   # "sorted" | "ragged" | "dense"
         remat_policy: str | None = None,  # None | "dots" (§Perf cell B)
         kv_dtype: str = "native",       # "native" | "int8" (§Perf cell A)
+        kernel_mesh=None,               # ('kv','hd') mesh for serve kernels
     ):
         assert cfg.family in ("dense", "moe", "vlm", "audio"), cfg.family
         self.cfg = cfg
         self.use_kernels = use_kernels
+        #: with a >1-device ('kv','hd') mesh the serve paths dispatch the
+        #: Pallas kernels through the shard_map wrappers in kernels.ops —
+        #: each device runs the kernel on its local KV-pool slice (see the
+        #: ops module docstring); the executor binds this via
+        #: ``serve.executor._mesh_kernel_model``
+        self.kernel_mesh = kernel_mesh
         self.capacity_factor = capacity_factor
         self.remat = remat
         self.shard = shard or _no_shard
@@ -278,6 +285,15 @@ class TransformerLM:
     def _kv_store_dtype(self):
         return jnp.int8 if self.kv_dtype == "int8" else self.dtype
 
+    def _serve_kernel_mesh(self):
+        """The ('kv','hd') mesh the serve-path kernels shard_map over, or
+        None for a plain single-device trace.  Only live when kernels are:
+        the jnp paths need no shard_map (GSPMD partitions them freely)."""
+        m = getattr(self, "kernel_mesh", None)
+        if self.use_kernels and m is not None and m.size > 1:
+            return m
+        return None
+
     def _kv_quant(self, x: jax.Array) -> jax.Array:
         if self.kv_dtype != "int8":
             return x
@@ -370,24 +386,40 @@ class TransformerLM:
             )
         page = state.page_size
         hkv, hd = cfg.num_kv_heads, cfg.head_dim
+        mesh = self._serve_kernel_mesh()
 
         def layer(block_p, x, k_pool, v_pool, is_moe):
             q, k, v = self._block_serve_qkv(block_p, x, positions)
             # unit-stride burst write through the page table (C2-burst)
-            k_pool = ops.paged_copy(
-                k.reshape(b, s, hkv * hd),
-                k_pool.reshape(-1, page, hkv * hd),
-                state.page_table, prompt_lens, page_size=page,
-                use_kernel=self.use_kernels,
-            ).reshape(k_pool.shape)
-            v_pool = ops.paged_copy(
-                v.reshape(b, s, hkv * hd),
-                v_pool.reshape(-1, page, hkv * hd),
-                state.page_table, prompt_lens, page_size=page,
-                use_kernel=self.use_kernels,
-            ).reshape(v_pool.shape)
+            if mesh is not None:
+                # shard_map dispatch: 4-D natural layout to the boundary,
+                # merged-W reshape happens shard-locally (kernels/ops.py)
+                k_pool = ops.paged_copy_sharded(
+                    k, k_pool, state.page_table, prompt_lens,
+                    page_size=page, mesh=mesh,
+                )
+                v_pool = ops.paged_copy_sharded(
+                    v, v_pool, state.page_table, prompt_lens,
+                    page_size=page, mesh=mesh,
+                )
+            else:
+                k_pool = ops.paged_copy(
+                    k.reshape(b, s, hkv * hd),
+                    k_pool.reshape(-1, page, hkv * hd),
+                    state.page_table, prompt_lens, page_size=page,
+                    use_kernel=self.use_kernels,
+                ).reshape(k_pool.shape)
+                v_pool = ops.paged_copy(
+                    v.reshape(b, s, hkv * hd),
+                    v_pool.reshape(-1, page, hkv * hd),
+                    state.page_table, prompt_lens, page_size=page,
+                    use_kernel=self.use_kernels,
+                ).reshape(v_pool.shape)
             qt, kt, vt = (t.swapaxes(1, 2) for t in (q, k, v))
-            if self.use_kernels:
+            if mesh is not None:
+                o = ops.flash_attention_sharded(qt, kt, vt, causal=True,
+                                                mesh=mesh)
+            elif self.use_kernels:
                 o = ops.flash_attention(qt, kt, vt, causal=True)
             elif s > 1024:
                 o = ref.chunked_attention_ref(qt, kt, vt, causal=True)
@@ -462,28 +494,48 @@ class TransformerLM:
         x = self.embed(params, tokens)
         kv_scale = (1.0 / self.KV_INT8_SCALE
                     if self.kv_dtype == "int8" else None)
+        mesh = self._serve_kernel_mesh()
 
         def layer(block_p, x, k_pool, v_pool, is_moe):
             q, k, v = self._block_serve_qkv(block_p, x, positions)
-            k_pool = ops.paged_copy_at(
-                self._kv_quant(k).reshape(b, s, hkv * hd),
-                k_pool.reshape(-1, page, hkv * hd),
-                state.page_table, start_lens, chunk_lens, page_size=page,
-                use_kernel=self.use_kernels,
-            ).reshape(k_pool.shape)
-            v_pool = ops.paged_copy_at(
-                self._kv_quant(v).reshape(b, s, hkv * hd),
-                v_pool.reshape(-1, page, hkv * hd),
-                state.page_table, start_lens, chunk_lens, page_size=page,
-                use_kernel=self.use_kernels,
-            ).reshape(v_pool.shape)
+            if mesh is not None:
+                k_pool = ops.paged_copy_at_sharded(
+                    self._kv_quant(k), k_pool, state.page_table,
+                    start_lens, chunk_lens, page_size=page, mesh=mesh,
+                )
+                v_pool = ops.paged_copy_at_sharded(
+                    self._kv_quant(v), v_pool, state.page_table,
+                    start_lens, chunk_lens, page_size=page, mesh=mesh,
+                )
+            else:
+                k_pool = ops.paged_copy_at(
+                    self._kv_quant(k).reshape(b, s, hkv * hd),
+                    k_pool.reshape(-1, page, hkv * hd),
+                    state.page_table, start_lens, chunk_lens, page_size=page,
+                    use_kernel=self.use_kernels,
+                ).reshape(k_pool.shape)
+                v_pool = ops.paged_copy_at(
+                    self._kv_quant(v).reshape(b, s, hkv * hd),
+                    v_pool.reshape(-1, page, hkv * hd),
+                    state.page_table, start_lens, chunk_lens, page_size=page,
+                    use_kernel=self.use_kernels,
+                ).reshape(v_pool.shape)
             # attend through the page table: causal mask on absolute
             # positions (cache + committed chunk prefix)
-            o = ops.paged_prefill_attention(
-                q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
-                state.page_table, start_lens, page_size=page,
-                use_kernel=self.use_kernels, kv_scale=kv_scale,
-            )
+            if mesh is not None and kv_scale is None:
+                o = ops.paged_prefill_attention_sharded(
+                    q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
+                    state.page_table, start_lens, page_size=page, mesh=mesh,
+                )
+            else:
+                # int8 pools dequantize on the jnp gather path only — the
+                # kernel gate in ops keeps that ref path even with
+                # use_kernels on, and GSPMD partitions it freely
+                o = ops.paged_prefill_attention(
+                    q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
+                    state.page_table, start_lens, page_size=page,
+                    use_kernel=self.use_kernels, kv_scale=kv_scale,
+                )
             o = o.reshape(b, s, hkv * g * hd)
             x = x + o @ block_p["attn"]["wo"]
             x = self._ffn_serve(block_p, x, is_moe)
@@ -550,9 +602,11 @@ class TransformerLM:
             frames < 0, n_rows - 1, frames * page + pos % page
         )                                                       # [B]
         new_lens = jnp.where(frames < 0, pos, pos + 1)
+        mesh = self._serve_kernel_mesh()
 
         def layer(block_p, x, k_pool, v_pool, is_moe):
             q, k, v = self._block_serve_qkv(block_p, x, pos[:, None])
+            # the single-token row scatter is plain jnp — GSPMD shards it
             k_pool = k_pool.reshape(-1, hkv, hd).at[rows].set(
                 self._kv_quant(k[:, 0])
             ).reshape(k_pool.shape)
@@ -562,11 +616,17 @@ class TransformerLM:
             qh = q[:, 0].reshape(b, hkv, g, hd)
             kv_scale = (1.0 / self.KV_INT8_SCALE
                         if self.kv_dtype == "int8" else None)
-            o = ops.paged_decode_attention(
-                qh, k_pool, v_pool, state.page_table, new_lens,
-                page_size=page, use_kernel=self.use_kernels,
-                kv_scale=kv_scale,
-            )                                     # [B, Hkv, G, hd]
+            if mesh is not None and kv_scale is None:
+                o = ops.paged_decode_attention_sharded(
+                    qh, k_pool, v_pool, state.page_table, new_lens,
+                    page_size=page, mesh=mesh,
+                )
+            else:
+                o = ops.paged_decode_attention(
+                    qh, k_pool, v_pool, state.page_table, new_lens,
+                    page_size=page, use_kernel=self.use_kernels,
+                    kv_scale=kv_scale,
+                )                                 # [B, Hkv, G, hd]
             x = x + (o.reshape(b, 1, hkv * g * hd) @ block_p["attn"]["wo"])
             x = self._ffn_serve(block_p, x, is_moe)
             return x, k_pool, v_pool

@@ -28,7 +28,17 @@ spill/restore.  Here:
     scalar-plane operand replicate, and all jitted dispatches carry
     explicit ``in_shardings``/``out_shardings`` with donated pools so the
     fused decode horizon runs sharded for free — the Ara2 analogue of
-    scaling lanes/cores under one shared, coherent translation structure.
+    scaling lanes/cores under one shared, coherent translation structure;
+  * the Pallas kernels stay LIVE on that mesh: a kernel-built model is
+    rebound to a mesh twin (``_mesh_kernel_model``) whose serve paths
+    shard_map every paged-attention/paged-copy call onto per-device pool
+    slices — KV-head shards attend independently (per-head online
+    softmax: no collective), head_dim shards all-gather K/V inside the
+    shard body, the replicated page table translates without
+    communication (specs per operand: ``kernels/ops.py``).  The jnp twin
+    survives only as the explicit ``ServeConfig.use_ref_path`` escape
+    hatch; every compute step is tallied as ``kernel_dispatches`` vs
+    ``ref_path_dispatches`` so any fallback is loud.
 
 The executor implements the scheduler's :class:`~repro.serve.scheduler.
 DataPlane` protocol — both the movement surface (spill/restore/discard/
@@ -155,19 +165,39 @@ _copy_pages = jax.jit(_copy_pages_impl, donate_argnums=(0, 1))
 
 @functools.lru_cache(maxsize=None)
 def _ref_path_model(model: TransformerLM) -> TransformerLM:
-    """Ref-path twin of ``model`` for >1-device meshes.
+    """Explicit jnp escape hatch (``ServeConfig.use_ref_path``).
 
-    The Pallas kernels assume a single device's pool view (scalar-
-    prefetched page tables index local frames), so a sharded executor
-    dispatches through a shallow copy with ``use_kernels=False`` — the jnp
-    reference paths, which GSPMD partitions freely.  Cached per model so
-    every engine over the same model shares the twin's jit traces; the
-    single-device executor (and the kernel differential grids) keep the
-    kernel paths live no matter how many devices the process can see.
+    A shallow copy with ``use_kernels=False`` — the jnp reference paths,
+    which GSPMD partitions freely.  This used to be the *implicit* dispatch
+    for every kernel model under a >1-device mesh; the shard_map wrappers
+    in ``kernels.ops`` made that fallback unnecessary, so the twin remains
+    only behind the explicit config flag (``--no-kernels`` in
+    ``launch.serve``), and every compute step through it is counted as
+    ``ref_path_dispatches``.  Cached per model so every engine over the
+    same model shares the twin's jit traces.
     """
     import copy
     twin = copy.copy(model)
     twin.use_kernels = False
+    return twin
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_kernel_model(model: TransformerLM, mesh) -> TransformerLM:
+    """Mesh-bound kernel twin: the Pallas paths stay LIVE under sharding.
+
+    A shallow copy with ``kernel_mesh=mesh``: the model's serve paths then
+    dispatch paged attention / paged copies through the shard_map wrappers
+    in ``kernels.ops``, where each device runs the unmodified kernel on
+    its local KV-pool slice (KV-head sharding is collective-free; head_dim
+    sharding all-gathers K/V inside the shard body — see the ops module
+    docstring for the per-operand specs).  Cached per (model, mesh) so
+    engines over the same pair share jit traces, mirroring
+    ``_sharded_steps``.
+    """
+    import copy
+    twin = copy.copy(model)
+    twin.kernel_mesh = mesh
     return twin
 
 
@@ -275,11 +305,22 @@ class Executor:
         self.mesh = mesh
         self._pool_sh = self._rep_sh = None
         self._step_model = model
+        #: True iff compute steps dispatch through a use_kernels=False
+        #: twin of a kernel-built model (the explicit escape hatch) —
+        #: counted per dispatch as ``ref_path_dispatches``
+        self._ref_path = False
+        if getattr(cfg, "use_ref_path", False) and getattr(
+                model, "use_kernels", False):
+            self._step_model = _ref_path_model(model)
+            self._ref_path = True
         if mesh is not None:
-            if mesh.size > 1 and getattr(model, "use_kernels", False):
-                # Pallas paths cannot trace into a >1-device layout; the
-                # twin reroutes every op to the jnp ref path under GSPMD
-                self._step_model = _ref_path_model(model)
+            if mesh.size > 1 and getattr(
+                    self._step_model, "use_kernels", False):
+                # kernels stay LIVE under the mesh: the twin binds the
+                # mesh so the serve paths shard_map every Pallas call
+                # onto per-device pool slices (kernels/ops.py)
+                self._step_model = _mesh_kernel_model(self._step_model,
+                                                      mesh)
             self._pool_sh, self._rep_sh = _executor_shardings(
                 mesh, model.cfg.num_kv_heads, model.cfg.head_dim
             )
@@ -298,9 +339,11 @@ class Executor:
             # site below is placement-oblivious
             self._steps = {
                 "ptab": _apply_ptab_delta,
-                "prefill": functools.partial(_prefill_step, model),
-                "continue": functools.partial(_continue_step, model),
-                "decode": functools.partial(_decode_step, model),
+                "prefill": functools.partial(_prefill_step,
+                                             self._step_model),
+                "continue": functools.partial(_continue_step,
+                                              self._step_model),
+                "decode": functools.partial(_decode_step, self._step_model),
                 "copy_pages": _copy_pages,
             }
 
@@ -308,22 +351,26 @@ class Executor:
     # sharding invariants (mesh mode)
     # ------------------------------------------------------------------
 
-    def check_sharding_invariants(self) -> None:
+    def check_sharding_invariants(self, extra=()) -> None:
         """Mesh mode: every persistent device array must still carry its
         declared layout.  The update paths that could silently reshard it
-        — donated step outputs, the ptab delta scatter, COW tail copies,
-        and page-granular spill/restore through ``ContextSwitcher`` —
-        all run between two calls of this check, so a drift (which would
-        cost a full rematerialization on the next dispatch) fails loudly
-        instead of showing up as a perf cliff.  Metadata-only: no device
-        sync."""
+        — donated step outputs (including the shard_map kernel dispatches,
+        whose claimed out specs GSPMD takes on faith with replication
+        checks off), the ptab delta scatter, COW tail copies, and
+        page-granular spill/restore through ``ContextSwitcher`` — all run
+        between two calls of this check, so a drift (which would cost a
+        full rematerialization on the next dispatch) fails loudly instead
+        of showing up as a perf cliff.  ``extra`` adds transient
+        ``(name, array, want)`` triples — the compute steps pass their
+        kernel outputs (logits / sampled blocks) with the replicated
+        sharding the step declared.  Metadata-only: no device sync."""
         if self.mesh is None:
             return
         for name, arr, want in (
             ("k_pools", self.kv.k_pools, self._pool_sh),
             ("v_pools", self.kv.v_pools, self._pool_sh),
             ("page_table", self._ptab, self._rep_sh),
-        ):
+        ) + tuple(extra):
             if not arr.sharding.is_equivalent_to(want, arr.ndim):
                 # a real exception, not `assert`: the guard must survive
                 # `python -O`, where asserts are compiled out
@@ -355,6 +402,41 @@ class Executor:
     # compute steps
     # ------------------------------------------------------------------
 
+    def _count_dispatch(self) -> None:
+        """Kernel-vs-ref observability, once per compute step: the silent
+        mesh fallback this counter made loud is gone, so in any gated run
+        ``ref_path_dispatches`` must be 0 unless the explicit escape hatch
+        (``ServeConfig.use_ref_path``) asked for the jnp twin."""
+        if self._ref_path:
+            self.counters.inc("ref_path_dispatches")
+        elif getattr(self._step_model, "use_kernels", False):
+            self.counters.inc("kernel_dispatches")
+
+    def _continuation_gather_bytes(self, start_lens, smax: int,
+                                   nrows: int) -> int:
+        """Analytical K+V bytes the continuation-prefill attention reads
+        per layer stack — the paper's bytes-gathered cost model, scored
+        per dispatch so ``bench_serve_sharded`` can gate the kernel's
+        page-streaming win ON THE MESH.  Kernel path: only pages reachable
+        under the causal clamp per query block (``pages_touched``, the
+        same formula the prefill kernel's grid enforces, with the ops
+        wrapper's default bq).  Ref path: the jnp oracle gathers every
+        row's full table reach."""
+        from repro.kernels.paged_prefill_attention import pages_touched
+        cfg = self.model.cfg
+        per_tok = (2 * cfg.num_kv_heads * cfg.head_dim
+                   * jnp.dtype(self.kv.k_pools.dtype).itemsize)
+        if getattr(self._step_model, "use_kernels", False):
+            pages = sum(
+                pages_touched(int(st), smax, self.cfg.max_pages_per_seq,
+                              page_size=self.cfg.page_size, bq=32)
+                for st in start_lens
+            )
+            tokens = pages * self.cfg.page_size
+        else:
+            tokens = nrows * self.cfg.max_pages_per_seq * self.cfg.page_size
+        return cfg.num_layers * per_tok * tokens
+
     def _decode_multi_fn(self, horizon: int):
         """The fused-horizon dispatch for ``horizon`` (statics bound)."""
         if self.mesh is not None:
@@ -362,7 +444,7 @@ class Executor:
                 self._step_model, self.mesh, horizon, self.cfg.greedy
             )
         return functools.partial(
-            _decode_multi_step, self.model,
+            _decode_multi_step, self._step_model,
             horizon=horizon, greedy=self.cfg.greedy,
         )
 
@@ -381,6 +463,7 @@ class Executor:
             pt_rows,
         )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self._count_dispatch()
         self.counters.inc("prefix_tokens", n)
 
     def _pad_prompt_batch(self, reqs: list[Request]):
@@ -413,6 +496,12 @@ class Executor:
             # measures execution, not dispatch
             jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self._count_dispatch()
+        # kernel outputs must come back on the declared (replicated)
+        # layout, not whatever GSPMD inferred through the shard_map
+        self.check_sharding_invariants(
+            extra=(("prefill_logits", logits, self._rep_sh),)
+        )
         first = self.sample(logits)
         return [np.asarray(first[i]) for i in range(len(reqs))]
 
@@ -429,6 +518,10 @@ class Executor:
             )
             jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
+        self._count_dispatch()
+        self.check_sharding_invariants(
+            extra=(("decode_logits", logits, self._rep_sh),)
+        )
         self.counters.inc("decode_dispatches")
         self.counters.inc("decode_horizon")
         return self.sample(logits)
@@ -456,6 +549,10 @@ class Executor:
             jax.block_until_ready(block)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         self._rng = rng
+        self._count_dispatch()
+        self.check_sharding_invariants(
+            extra=(("decode_block", block, self._rep_sh),)
+        )
         self.counters.inc("host_syncs")
         self.counters.inc("decode_dispatches")
         self.counters.inc("decode_horizon", plan.horizon)
@@ -492,14 +589,29 @@ class Executor:
             )
             jax.block_until_ready(logits)
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
-        self.check_sharding_invariants()
+        self._count_dispatch()
+        self.check_sharding_invariants(
+            extra=(("continue_logits", logits, self._rep_sh),)
+        )
         self.counters.inc("continuation_prefill_tokens", int(lens.sum()))
+        self.counters.inc(
+            "prefill_bytes_gathered",
+            self._continuation_gather_bytes(
+                [int(s) for s in start_lens], int(chunks.shape[1]),
+                len(reqs),
+            ),
+        )
         first = self.sample(logits)
         return [np.asarray(first[i]) for i in range(len(reqs))]
 
     def spill(self, req: Request) -> None:
         """Page-granular spill: only the victim's frames leave the device."""
         self.switcher.spill_kv(req.req_id, self.kv.k_pools, self.kv.v_pools)
+        # the spill gather (jnp.take over the page axis of a sharded pool
+        # slice) must be read-only w.r.t. layout — symmetric with the
+        # restore check below, so a kernel-path mesh run cannot drift
+        # between a spill and the next dispatch
+        self.check_sharding_invariants()
 
     def restore(self, req: Request, num_tokens: int) -> None:
         """Page-granular restore into freshly allocated frames."""

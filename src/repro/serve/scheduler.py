@@ -69,6 +69,13 @@ class ServeConfig:
     #: horizon is rounded down to a power of two so the jit cache stays
     #: O(log max_horizon) entries.
     max_horizon: int = 8
+    #: explicit escape hatch (``--no-kernels`` in launch.serve): dispatch
+    #: every compute step through a ``use_kernels=False`` twin of the
+    #: model — the jnp reference paths.  Never implied by a mesh anymore
+    #: (kernels shard_map over it, see kernels/ops.py); any dispatch
+    #: through the twin is counted as ``ref_path_dispatches`` so fallback
+    #: is observable, not silent.
+    use_ref_path: bool = False
 
 
 class RestoreFailure(RuntimeError):

@@ -173,20 +173,79 @@ class TestSpillRestoreSharded:
         assert_actually_sharded(shard)
 
 
-class TestKernelFallback:
-    def test_kernel_model_reroutes_to_ref_paths(self, setup):
-        """A kernel-built model under a >1-device mesh must dispatch
-        through the ref-path twin (Pallas kernels assume a single device's
-        pool view) and still match the single-device token stream."""
+class TestShardedKernelDispatch:
+    """Kernels stay LIVE on the mesh (the PR that killed the ref-path
+    fallback).  A kernel-built model under a >1-device mesh dispatches the
+    real Pallas kernels through shard_map on each device's local pool
+    slice; the jnp twin survives only behind the explicit
+    ``ServeConfig.use_ref_path`` escape hatch."""
+
+    def test_kernels_stay_live_on_mesh(self, setup):
         cfg, model, params, mesh = setup
         kmodel = build_model(cfg, remat=False, use_kernels=True)
         reqs = workload(cfg, n=3, seed=23, lo=5, hi=10)
         serve_cfg = ServeConfig(page_size=4, num_pages=64,
                                 max_pages_per_seq=32, max_batch=3)
-        _, out_s = run_engine(model, params, serve_cfg, reqs)
+        ksingle, out_s = run_engine(kmodel, params, serve_cfg, reqs)
         shard, out_m = run_engine(kmodel, params, serve_cfg, reqs, mesh=mesh)
+        # the step model is a mesh twin with kernels ON, not the jnp twin
         assert shard.executor._step_model is not kmodel
-        assert shard.executor._step_model.use_kernels is False
-        assert kmodel.use_kernels is True          # original untouched
+        assert shard.executor._step_model.use_kernels is True
+        assert shard.executor._step_model.kernel_mesh is mesh
+        assert kmodel.kernel_mesh is None          # original untouched
+        # every compute step went through the kernel path on both sides
+        assert shard.counters.get("ref_path_dispatches") == 0
+        assert shard.counters.get("kernel_dispatches") > 0
+        assert (shard.counters.get("kernel_dispatches")
+                == ksingle.counters.get("kernel_dispatches"))
+        # ...and the sharded kernels reproduce the single-device kernels
         assert out_s == out_m
         assert_actually_sharded(shard)
+
+    def test_explicit_ref_path_escape_hatch(self, setup):
+        """``use_ref_path=True`` (--no-kernels) is the ONLY remaining way
+        to get the jnp twin, and every step it serves is counted."""
+        cfg, model, params, mesh = setup
+        kmodel = build_model(cfg, remat=False, use_kernels=True)
+        reqs = workload(cfg, n=3, seed=23, lo=5, hi=10)
+        serve_cfg = ServeConfig(page_size=4, num_pages=64,
+                                max_pages_per_seq=32, max_batch=3,
+                                use_ref_path=True)
+        shard, out_m = run_engine(kmodel, params, serve_cfg, reqs, mesh=mesh)
+        assert shard.executor._step_model.use_kernels is False
+        assert shard.counters.get("ref_path_dispatches") > 0
+        assert shard.counters.get("kernel_dispatches") == 0
+        # the hatch must agree with the kernels-off fixture model's stream
+        _, out_ref = run_engine(
+            model, params,
+            ServeConfig(page_size=4, num_pages=64, max_pages_per_seq=32,
+                        max_batch=3), reqs)
+        assert out_m == out_ref
+        assert_actually_sharded(shard)
+
+    def test_kernel_path_spill_restore_sharded(self, setup):
+        """Satellite regression: page-granular spill of a shard-local pool
+        slice under the LIVE kernel path.  ``spill`` now re-checks the
+        sharding invariants right after ``switcher.spill_kv`` (previously
+        only restore did), so a spill that de-shards the pools fails here
+        rather than corrupting layouts silently."""
+        cfg, model, params, mesh = setup
+        kmodel = build_model(cfg, remat=False, use_kernels=True)
+        reqs = workload(cfg, n=7, seed=13)
+        serve_cfg = ServeConfig(page_size=4, num_pages=16,
+                                max_pages_per_seq=16, max_batch=3)
+        ksingle, out_s = run_engine(kmodel, params, serve_cfg, reqs)
+        shard, out_m = run_engine(kmodel, params, serve_cfg, reqs, mesh=mesh)
+        assert shard.counters.get("preemptions") > 0
+        assert shard.counters.get("ref_path_dispatches") == 0
+        assert out_s == out_m
+        assert_actually_sharded(shard)
+        st, ss = shard.executor.switcher.stats, ksingle.executor.switcher.stats
+        # spill stayed page-granular: same victim pages and bytes as the
+        # single-device kernel run, and bytes = pages x per-page KV bytes
+        assert (st.pages_spilled, st.bytes_spilled) == \
+               (ss.pages_spilled, ss.bytes_spilled)
+        page_bytes = (cfg.num_layers * serve_cfg.page_size
+                      * cfg.num_kv_heads * cfg.head_dim
+                      * shard.executor.kv.k_pools.dtype.itemsize)
+        assert st.bytes_spilled == st.pages_spilled * page_bytes

@@ -12,12 +12,13 @@ contract).  Sections (select a subset with ``--only``):
   serve    — seed vs Scheduler/Executor serving split        (bench_serve_throughput)
   sharded  — executor over the ('kv','hd') serve mesh        (bench_serve_sharded)
   router   — ReplicaRouter over N engines vs N=1             (bench_serve_router)
+  prefix   — radix prefix cache: multi-turn chat, warm/cold  (bench_prefix_cache)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-Four sections double as CI gates when explicitly selected:
+Five sections double as CI gates when explicitly selected:
   * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
     gathers at least as many bytes as the gathered-pages reference path;
   * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
@@ -39,9 +40,15 @@ Four sections double as CI gates when explicitly selected:
     ReplicaRouter over N in {1,2,4} engines) is per-request
     token-identical to the N=1 reference AND the router's global
     page/counter accounting equals the sum of the per-replica
-    accounting.
+    accounting;
+  * ``--only prefix`` exits nonzero unless the multi-turn chat workload
+    skips more than half the cold engine's prefill tokens
+    (``prefill_tokens_skipped / prefill_tokens_cold > 0.5``) while every
+    (session, turn) stream stays token-identical to the cold-admission
+    reference.
 
-The serve, sharded and router sections also append their metrics (tagged
+The serve, sharded, router and prefix sections also append their metrics
+(tagged
 with a ``section`` field) to ``BENCH_serve.json`` at the repo root — the
 machine-readable perf trajectory across PRs, which
 ``scripts/bench_regress.py`` gates on per section (counters only, never
@@ -184,6 +191,28 @@ def _router(gate: bool = False):
     return csv
 
 
+def _prefix(gate: bool = False):
+    from benchmarks import bench_prefix_cache
+    csv, metrics = bench_prefix_cache.run()
+    _record_serve_trajectory(metrics, section="prefix")
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append(
+            "radix-hit streams diverged from the cold-admission reference "
+            "(a COW-mapped prefix must reproduce full-prefill state "
+            "exactly)")
+    if metrics["skip_ratio"] <= 0.5:
+        failures.append(
+            f"skip ratio = {metrics['skip_ratio']:.2f} (must be > 0.5: "
+            "the multi-turn chat workload re-prefills history the radix "
+            "cache should be serving from resident pages)")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only prefix: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -223,6 +252,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("router",
      "Replica sweep: ReplicaRouter over N engines vs the N=1 reference",
      _router),
+    ("prefix",
+     "Radix prefix cache: multi-turn chat, warm (radix) vs cold admission",
+     _prefix),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -246,7 +278,7 @@ def main(argv: list[str] | None = None) -> None:
         if args.only is not None and key not in args.only:
             continue
         section(title)
-        if key in ("prefill", "serve", "sharded", "router"):
+        if key in ("prefill", "serve", "sharded", "router", "prefix"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)

@@ -33,9 +33,11 @@ REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
 #: per-section (name, extractor, direction): "le" = new must stay <=
 #: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
-#: ``serve``, ``sharded`` and ``router`` gates (tagged with a "section"
-#: field; untagged legacy records are ``serve``), so each section is
-#: compared against its OWN previous record — never serve-vs-router.
+#: ``serve``, ``sharded``, ``router`` and ``prefix`` gates (tagged with a
+#: "section" field; untagged legacy records read as ``serve`` for
+#: backward compatibility, though the checked-in trajectory is fully
+#: tagged — ``tests/test_benchmarks.py`` asserts that), so each section
+#: is compared against its OWN previous record — never serve-vs-router.
 CHECKS_BY_SECTION = {
     "serve": (
         ("host_syncs_per_token",
@@ -64,6 +66,16 @@ CHECKS_BY_SECTION = {
          lambda m: float(m["ref_path_dispatches"]), "le"),
         ("kernel_dispatches",
          lambda m: float(m["kernel_dispatches"]), "ge"),
+    ),
+    # the radix-prefix gate: counters only (token identity and the >0.5
+    # skip-ratio floor live in ``benchmarks/run.py --only prefix``; this
+    # gate catches the cache silently matching/reusing LESS on the same
+    # multi-turn workload — exact scheduler event counts, zero noise)
+    "prefix": (
+        ("prefix_hits",
+         lambda m: float(m["prefix_hits"]), "ge"),
+        ("prefill_tokens_skipped",
+         lambda m: float(m["prefill_tokens_skipped"]), "ge"),
     ),
 }
 

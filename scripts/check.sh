@@ -4,11 +4,15 @@
 #   2. import the package surface (catches broken module wiring);
 #   3. run the kernel differential grid, the `router` suite (multi-replica
 #      fault-injection harness, fake planes — pure host policy, fail
-#      fast), then the `fast` pytest subset;
+#      fast), the `prefix` suite (radix prefix-cache properties, host-only
+#      planes), then the `fast` pytest subset;
 #   4. serve gate (`benchmarks/run.py --only serve`) + router replica-
 #      sweep gate (`--only router`: token identity vs N=1 + global-vs-
-#      per-replica accounting) + the counter-based regression gate
-#      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
+#      per-replica accounting) + prefix-cache gate (`--only prefix`:
+#      >50% of cold prefill tokens skipped on the multi-turn chat
+#      workload, streams token-identical to cold admission) + the
+#      counter-based regression gate (`scripts/bench_regress.py` over
+#      BENCH_serve.json, per section);
 #   5. IF >1 host device is advertised: the sharded-kernel differential
 #      subset first (fail fast if a shard_map wrapper diverges from the
 #      single-device kernel / jnp oracle), then the full `sharded` pytest
@@ -53,14 +57,20 @@ python -m pytest -q -m kernels "$@"
 echo "== router suite (multi-replica fault-injection harness, fake planes)"
 python -m pytest -q -m "router and not sharded" "$@"
 
+echo "== prefix-cache property suite (radix sharing, host-only planes)"
+python -m pytest -q -m "prefix and not sharded" "$@"
+
 echo "== fast tests"
-python -m pytest -q -m "fast and not kernels and not sharded and not router" "$@"
+python -m pytest -q -m "fast and not kernels and not sharded and not router and not prefix" "$@"
 
 echo "== serve gate (fused decode horizon must amortize host syncs)"
 python -m benchmarks.run --only serve
 
 echo "== router replica-sweep gate (token identity vs N=1 + accounting)"
 python -m benchmarks.run --only router
+
+echo "== prefix-cache gate (>50% prefill skipped, token-identical to cold)"
+python -m benchmarks.run --only prefix
 
 echo "== serve counter regression gate (BENCH_serve.json trajectory)"
 python scripts/bench_regress.py

@@ -120,24 +120,37 @@ class ContextSwitcher:
         )
 
     def restore_kv(
-        self, seq_id: int, k_pools: jnp.ndarray, v_pools: jnp.ndarray
+        self, seq_id: int, k_pools: jnp.ndarray, v_pools: jnp.ndarray,
+        shared_prefix_pages: list[int] | None = None,
     ) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
         """Swap ``seq_id`` back in through a page-granular scatter.
 
         Returns ``(k_pools, v_pools, extra_state)``.  The input pool buffers
         are DONATED: callers must replace their references with the returned
         arrays.  Raises OutOfPagesError if frames are unavailable.
+
+        ``shared_prefix_pages``: leading frames to re-share by refcount
+        (``VirtualMemory.restore_seq``) instead of re-mapping — those
+        frames are still resident (the pinned prefix) and hold bytes
+        identical to the spilled copy, so they are neither allocated nor
+        scattered; only the unshared tail moves.  Restore bandwidth
+        (``bytes_restored``/``pages_restored``) counts the moved tail only.
         """
         spilled = self._swap[seq_id]
-        state = self.vmem.restore_seq(seq_id, spilled.num_tokens)  # may raise
-        pages = jnp.asarray(np.asarray(state.pages, dtype=np.int32))
+        state = self.vmem.restore_seq(
+            seq_id, spilled.num_tokens, shared_prefix_pages)  # may raise
+        skip = len(shared_prefix_pages or ())
         k_data, v_data = spilled.page_data[0], spilled.page_data[1]
-        k_pools = _scatter_pages(k_pools, pages, jnp.asarray(k_data))
-        v_pools = _scatter_pages(v_pools, pages, jnp.asarray(v_data))
+        if skip:
+            k_data, v_data = k_data[:, skip:], v_data[:, skip:]
+        if len(state.pages) > skip:
+            pages = jnp.asarray(np.asarray(state.pages[skip:], np.int32))
+            k_pools = _scatter_pages(k_pools, pages, jnp.asarray(k_data))
+            v_pools = _scatter_pages(v_pools, pages, jnp.asarray(v_data))
         del self._swap[seq_id]
-        nbytes = int(spilled.page_data.nbytes)
+        nbytes = int(k_data.nbytes + v_data.nbytes)
         self.stats.bytes_restored += nbytes
-        self.stats.pages_restored += 2 * len(state.pages)
+        self.stats.pages_restored += 2 * (len(state.pages) - skip)
         self.stats.modeled_cycles += self.cost.bytes_move_cycles(nbytes)
         return k_pools, v_pools, spilled.extra_state
 

@@ -6,6 +6,16 @@ relevant event timestamps" (§3).  This is the software restatement: named
 monotonic counters, a bounded snapshot FIFO of (timestamp, event, payload)
 records, and context-manager timers.  Used by the serving engine, the train
 loop, and every benchmark.
+
+Counters are open-vocabulary (any name auto-registers at zero).  The radix
+prefix layer adds the reuse accounting the prefix bench gates on:
+``prefix_hits`` (admissions that COW-mapped a matched prefix),
+``pages_reused`` (physical frames re-shared by refcount — radix hits plus
+shared-page restores), ``prefill_tokens_skipped`` (prompt tokens whose
+prefill was replaced by page sharing), ``shared_restores`` (restores that
+re-shared still-resident pinned-prefix frames instead of allocating), and
+the router's ``prefix_routed`` (placements where the longest-matching-
+prefix score changed the prefix-blind choice).
 """
 
 from __future__ import annotations

@@ -171,6 +171,10 @@ class VirtualMemory:
         # device-resident copy of the table (serve.Executor) is updated
         # incrementally from these deltas instead of re-uploaded wholesale.
         self._dirty_rows: set[int] = set()
+        # observers of mapping teardown (unmap_seq / spill_seq): the serve
+        # prefix cache keys its radix index off these so it never
+        # advertises pages whose frames have been freed.
+        self._unmap_hooks: list = []
 
     # ---- queries ------------------------------------------------------
 
@@ -190,6 +194,14 @@ class VirtualMemory:
     @property
     def num_free_slots(self) -> int:
         return len(self._free_slots)
+
+    def add_unmap_hook(self, fn) -> None:
+        """Register ``fn(seq_id)`` to fire whenever a sequence's mapping is
+        torn down — retirement (:meth:`unmap_seq`), preemption
+        (:meth:`spill_seq`), or a fork rollback.  The serve-plane prefix
+        cache uses this to evict its index entries the moment the page run
+        they describe stops being resident (refcounts may drop to zero)."""
+        self._unmap_hooks.append(fn)
 
     def device_page_table(self) -> jnp.ndarray:
         """The satp analogue: `[max_seqs, max_pages_per_seq] int32`."""
@@ -338,6 +350,8 @@ class VirtualMemory:
         self._lens[state.slot] = 0
         self._free_slots.append(state.slot)
         self._dirty_rows.add(state.slot)
+        for fn in self._unmap_hooks:
+            fn(seq_id)
 
     # ---- spill / restore (context switch) --------------------------------
 
@@ -353,11 +367,53 @@ class VirtualMemory:
         self._lens[state.slot] = 0
         self._free_slots.append(state.slot)
         self._dirty_rows.add(state.slot)
+        for fn in self._unmap_hooks:
+            fn(seq_id)
         return state
 
-    def restore_seq(self, seq_id: int, num_tokens: int) -> SeqState:
-        """Re-map a previously spilled sequence (frames may differ)."""
-        return self.map_seq(seq_id, num_tokens)
+    def restore_seq(self, seq_id: int, num_tokens: int,
+                    shared_prefix_pages: Sequence[int] | None = None
+                    ) -> SeqState:
+        """Re-map a previously spilled sequence (frames may differ).
+
+        ``shared_prefix_pages``: physical frames, still resident under
+        another mapping (in practice the pinned engine prefix), to re-SHARE
+        as the sequence's leading pages by refcount instead of demanding
+        fresh frames.  The caller guarantees their content already equals
+        the corresponding spilled bytes (whole shared pages are immutable
+        while refcounted), so only the unshared tail needs frames — the
+        reason a victim whose footprint exceeds the preemptible pool can
+        still be restorable.
+        """
+        if not shared_prefix_pages:
+            return self.map_seq(seq_id, num_tokens)
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already mapped")
+        if num_tokens > self.config.max_tokens_per_seq:
+            raise ValueError(
+                f"seq of {num_tokens} tokens exceeds page-table reach "
+                f"{self.config.max_tokens_per_seq}"
+            )
+        if not self._free_slots:
+            raise OutOfPagesError(requested=1, available=0, kind="slots")
+        n_pages = self.config.pages_for(num_tokens)
+        if len(shared_prefix_pages) > n_pages:
+            raise ValueError("more shared pages than the sequence spans")
+        shared = [self.pool.share(p) for p in shared_prefix_pages]
+        try:
+            own = self.pool.alloc(n_pages - len(shared))
+        except OutOfPagesError:
+            self.pool.free(shared)
+            raise
+        pages = shared + own
+        slot = self._free_slots.pop()
+        state = SeqState(seq_id=seq_id, slot=slot, length=num_tokens,
+                         pages=pages)
+        self._seqs[seq_id] = state
+        self._table[slot, :n_pages] = pages
+        self._lens[slot] = num_tokens
+        self._dirty_rows.add(slot)
+        return state
 
     # ---- translation (host-side, trace-producing) -------------------------
 

@@ -53,6 +53,11 @@ def main() -> None:
                          "integer caps the device count, 'off' (default) "
                          "keeps single-device placement; Pallas kernels "
                          "stay LIVE on the mesh via shard_map")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix prefix cache: admissions whose "
+                         "prompts share leading whole pages with a resident "
+                         "run no longer COW-map them automatically (explicit "
+                         "--prefix-len forking still works)")
     ap.add_argument("--no-kernels", action="store_true",
                     help="explicit escape hatch: dispatch every compute "
                          "step through the jnp reference twin instead of "
@@ -88,6 +93,7 @@ def main() -> None:
         max_batch=args.max_batch,
         max_horizon=args.max_horizon,
         use_ref_path=args.no_kernels,
+        prefix_cache=not args.no_prefix_cache,
     )
     engines = [Engine(model, params, serve_cfg, mesh=mesh)
                for _ in range(max(1, args.replicas))]
@@ -159,6 +165,10 @@ def main() -> None:
           f" over {c.get('decode_dispatches')} dispatches, "
           f"{c.ratio('host_syncs', 'decode_tokens'):.3f} host syncs/token, "
           f"{c.get('horizon_collapses')} pool-pressure collapses")
+    print(f"  radix prefix cache: {c.get('prefix_hits')} hits, "
+          f"{c.get('pages_reused')} pages reused, "
+          f"{c.get('prefill_tokens_skipped')} prefill tokens skipped, "
+          f"{c.get('shared_restores')} shared restores")
     print("pool:", stats["pool"])
 
 

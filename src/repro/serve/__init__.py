@@ -18,11 +18,20 @@ Split per the AraOS architecture, one layer per plane:
   call-for-call, token-for-token the plain engine — the equivalence the
   router test suite gates on for N in {1, 2, 4}.
 
+  **Radix prefix layer.**  Each Scheduler carries a
+  :class:`PrefixCache` (:mod:`repro.serve.prefix_cache`) — a
+  page-granularity radix trie over the token content of resident mapped
+  runs.  Admissions whose prompts share leading whole pages with a
+  registered run COW-map those pages automatically (no fork API) and
+  prefill only the divergent chunk; the router generalizes fork affinity
+  into an additive longest-matching-prefix score when ranking replicas.
+
 :class:`ReferenceEngine` is the frozen pre-split seed implementation kept
 for equivalence testing and before/after benchmarks.
 """
 from repro.serve.engine import Engine
 from repro.serve.executor import Executor
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.reference import ReferenceEngine
 from repro.serve.router import Replica, ReplicaRouter
 from repro.serve.scheduler import (
@@ -42,6 +51,7 @@ __all__ = [
     "Engine",
     "Executor",
     "HostOnlyPlane",
+    "PrefixCache",
     "ReferenceEngine",
     "Replica",
     "ReplicaRouter",

@@ -50,6 +50,18 @@ horizon: ``counters["host_syncs"] / counters["decode_tokens"]`` is the
 measured amortization (the ``benchmarks/run.py --only serve`` gate
 requires it < 1.0).  K=1 reproduces pre-horizon behavior exactly.
 
+**Radix prefix layer** (:mod:`repro.serve.prefix_cache`): the Scheduler
+keeps a page-granularity radix trie over the token content of resident
+mapped runs — the preloaded prefix, every committed prompt, every fork
+child.  A plain admission whose prompt's leading whole pages match a
+registered run COW-maps those pages from the owner (the same
+``fork_seq`` refcount machinery explicit forks use) and prefills only
+the divergent chunk through ``admit_forked_batch``'s batched
+continuation dispatch.  Token streams are identical to cold admission —
+causal KV content is a pure function of the token prefix — which the
+prefix bench gate (``benchmarks/run.py --only prefix``) asserts while
+requiring >50% of prefill tokens skipped on a multi-turn chat workload.
+
 The device pool reserves its LAST frame as scratch for masked decode
 lanes: the engine hands ``VirtualMemory`` one frame fewer than physically
 allocated.  The frozen pre-split implementation lives in
@@ -147,7 +159,10 @@ class Engine:
 
         Subsequent ``submit(req, share_prefix=True)`` requests fork their
         page tables from it: whole prefix pages are shared by refcount,
-        only the partial tail page is copied.
+        only the partial tail page is copied.  The prefix also enters the
+        scheduler's radix cache (AFTER its KV is committed here), so plain
+        requests whose prompts merely START with the prefix content share
+        its whole pages automatically — no fork API needed.
         """
         assert self.vmem.num_seqs == 0, "preload before serving"
         n = len(prefix_tokens)
@@ -156,6 +171,9 @@ class Engine:
         self.executor.preload_prefix(np.asarray(prefix_tokens, np.int32),
                                      slot, n)
         self.scheduler.prefix_len = n
+        self.scheduler.register_resident(
+            self.scheduler.PREFIX_ID, np.asarray(prefix_tokens, np.int32)
+        )
 
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)

@@ -613,8 +613,13 @@ class Executor:
         # between a spill and the next dispatch
         self.check_sharding_invariants()
 
-    def restore(self, req: Request, num_tokens: int) -> None:
-        """Page-granular restore into freshly allocated frames."""
+    def restore(self, req: Request, num_tokens: int,
+                shared_pages: list[int] | None = None) -> None:
+        """Page-granular restore into freshly allocated frames.
+
+        ``shared_pages``: leading frames the scheduler proved are still
+        the pinned prefix's (identical bytes, refcount-held) — re-shared
+        by the switcher instead of allocated and scattered."""
         # the DataPlane protocol passes the scheduler's recorded spill
         # length; the switcher's own record is authoritative — they must
         # agree or the re-mapped footprint would silently diverge
@@ -624,7 +629,8 @@ class Executor:
             f"{self.switcher.spilled_len(req.req_id)}"
         )
         k, v, _ = self.switcher.restore_kv(
-            req.req_id, self.kv.k_pools, self.kv.v_pools
+            req.req_id, self.kv.k_pools, self.kv.v_pools,
+            shared_prefix_pages=shared_pages,
         )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         # the switcher's scatter is layout-oblivious; the pools must come

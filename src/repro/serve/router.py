@@ -32,14 +32,27 @@ the affinity constraint overrides the base policy's unconstrained choice,
 the router counts a ``migrations_declined`` (the fork was *not* migrated
 to the otherwise-best replica, keeping prefix sharing instead).
 
+**Prefix-aware ranking** generalizes fork affinity into an additive
+score: for plain requests each candidate replica is probed
+(``Scheduler.probe_prefix``) for the longest radix-cached resident
+prefix of the request's prompt.  Under ``least_loaded`` the matched page
+count is subtracted from the replica's load (each matched page is one
+frame the replica will NOT allocate — plus the skipped prefill compute);
+under ``round_robin`` the cycle is restricted to the replicas with the
+maximal match whenever any replica matches at all.  It is a *score*, not
+a constraint: a heavily loaded prefix holder still loses to an idle cold
+replica once the load gap exceeds the matched pages.  Placements where
+the prefix score changed the base policy's choice are counted as
+``prefix_routed``.
+
 Counters (router-global, in ``router.counters``): ``submitted``,
 ``placements``, ``placements_replica{i}``, ``migrations_declined``,
-``cross_replica_queue_waits`` (request-steps spent in the global queue
-while every eligible replica was at its backlog bound).  Each replica's
-scheduler/executor counters stay per-replica; ``global_counters()``
-merges them, and the test-suite invariant is that every merged total
-equals the sum of the per-replica values (no event is double- or
-un-counted by adding replicas).
+``prefix_routed``, ``cross_replica_queue_waits`` (request-steps spent in
+the global queue while every eligible replica was at its backlog bound).
+Each replica's scheduler/executor counters stay per-replica;
+``global_counters()`` merges them, and the test-suite invariant is that
+every merged total equals the sum of the per-replica values (no event is
+double- or un-counted by adding replicas).
 """
 
 from __future__ import annotations
@@ -173,14 +186,33 @@ class ReplicaRouter:
             return elig, len(elig) < len(self.replicas)
         return list(self.replicas), False
 
-    def _rank(self, candidates: list[Replica],
-              advance_rr: bool = False) -> Replica:
-        """Base policy choice among ``candidates`` (never empty)."""
+    def _match_pages(self, rep: Replica, req: Request | None) -> int:
+        """Whole pages of ``req``'s prompt resident in ``rep``'s radix
+        cache (0 with no request / no cache / no match — every pre-prefix
+        ranking reduces to the base policy then)."""
+        if req is None:
+            return 0
+        matched, _ = rep.scheduler.probe_prefix(req)
+        return matched // rep.scheduler.cfg.page_size
+
+    def _rank(self, candidates: list[Replica], advance_rr: bool = False,
+              req: Request | None = None) -> Replica:
+        """Policy choice among ``candidates`` (never empty): the base
+        policy plus the additive prefix score for ``req`` (see the module
+        docstring).  ``req=None`` ranks prefix-blind — used to attribute
+        ``prefix_routed``/``migrations_declined`` to the constraint that
+        actually changed the outcome."""
         if self.policy == "round_robin":
+            pool = candidates
+            best = max((self._match_pages(rep, req) for rep in candidates),
+                       default=0)
+            if best > 0:
+                pool = [rep for rep in candidates
+                        if self._match_pages(rep, req) == best]
             n = len(self.replicas)
             for k in range(n):
                 cand = self.replicas[(self._rr_next + k) % n]
-                if cand in candidates:
+                if cand in pool:
                     if advance_rr:
                         self._rr_next = (
                             self.replicas.index(cand) + 1
@@ -188,7 +220,10 @@ class ReplicaRouter:
                     return cand
             raise AssertionError("unreachable: candidates is non-empty")
         return min(candidates,
-                   key=lambda rep: (rep.load_pages(), rep.replica_id))
+                   key=lambda rep: (
+                       rep.load_pages() - self._match_pages(rep, req),
+                       rep.replica_id,
+                   ))
 
     def _backlog_open(self, reps: list[Replica]) -> list[Replica]:
         if self.max_backlog is None:
@@ -210,13 +245,20 @@ class ReplicaRouter:
             # under the SAME backlog conditions (else a backlog-diverted
             # placement would masquerade as a declined migration).
             # Read-only rank: the round-robin pointer does not advance.
+            # Forks rank prefix-blind (affinity already restricted the
+            # pool to prefix holders — the score would be a no-op).
             free_pool = self._backlog_open(self.replicas) or open_elig
             free_choice = self._rank(free_pool)
             choice = self._rank(open_elig, advance_rr=True)
             if free_choice.replica_id != choice.replica_id:
                 self.counters.inc("migrations_declined")
         else:
-            choice = self._rank(open_elig, advance_rr=True)
+            # read-only prefix-blind rank first: a placement the prefix
+            # score diverted from the base choice counts as prefix_routed
+            blind_choice = self._rank(open_elig)
+            choice = self._rank(open_elig, advance_rr=True, req=req)
+            if blind_choice.replica_id != choice.replica_id:
+                self.counters.inc("prefix_routed")
         choice.scheduler.submit(req)     # stamps arrival in replica time
         choice.scheduler.counters.inc("router_placements")
         self.counters.inc("placements")

@@ -20,6 +20,19 @@ records, the step clock, the resident-prefix length) is factored into
 (:class:`repro.serve.router.ReplicaRouter`) is N schedulers over N data
 planes with zero shared mutable state — the single-replica engine is
 exactly the N=1 instance of that layering.
+
+**Radix prefix layer.**  Admission consults a per-replica
+:class:`~repro.serve.prefix_cache.PrefixCache` — a page-granularity radix
+trie over the token content of resident mapped runs — before allocating:
+a prompt whose leading whole pages match a registered run is admitted by
+COW-forking those pages from the owner (``fork_seq`` refcounts, no fork
+API on the request) and prefilling only the divergent chunk through the
+same batched continuation path forked admissions use.  Sequences are
+registered only after their prompt KV commits (``finish_prefill`` /
+``_flush_forked`` / ``register_resident``) and evicted automatically via
+the ``VirtualMemory`` unmap hook, so the trie always describes live
+frames.  Counters: ``prefix_hits``, ``pages_reused``,
+``prefill_tokens_skipped``.
 """
 
 from __future__ import annotations
@@ -31,6 +44,7 @@ from typing import Any, Protocol
 import numpy as np
 
 from repro.core import CostModel, OutOfPagesError, PerfCounters, VirtualMemory
+from repro.serve.prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -76,6 +90,13 @@ class ServeConfig:
     #: through the twin is counted as ``ref_path_dispatches`` so fallback
     #: is observable, not silent.
     use_ref_path: bool = False
+    #: global radix prefix cache: admissions whose leading whole pages
+    #: match a resident registered run are COW-mapped from the owner and
+    #: prefill skips the matched tokens (continuation path).  Token
+    #: streams are identical either way (causal KV is a pure function of
+    #: the token prefix); disable for a cold-admission baseline
+    #: (``--no-prefix-cache`` in launch.serve, the bench reference).
+    prefix_cache: bool = True
 
 
 class RestoreFailure(RuntimeError):
@@ -109,6 +130,12 @@ class ReplicaState:
     swap_requests: dict[int, Request] = dataclasses.field(
         default_factory=dict)
     spilled_tokens: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: spill-time provenance: the victim's leading frames that WERE the
+    #: pinned prefix's frames (refcount-shared).  A restore re-shares them
+    #: instead of demanding fresh frames — the reason a victim whose full
+    #: footprint exceeds the preemptible pool can still be reachable.
+    spilled_shared: dict[int, list[int]] = dataclasses.field(
+        default_factory=dict)
     step_i: int = 0
     prefix_len: int = 0
 
@@ -153,9 +180,12 @@ class DataPlane(Protocol):
         (``vmem.spill_seq``)."""
         ...
 
-    def restore(self, req: Request, num_tokens: int) -> None:
+    def restore(self, req: Request, num_tokens: int,
+                shared_pages: list[int] | None = None) -> None:
         """Re-map the sequence (``vmem.restore_seq``) and copy its pages
-        back in."""
+        back in.  ``shared_pages``: leading frames to re-share by refcount
+        (still resident under the pinned prefix) instead of re-mapping —
+        they are neither allocated nor copied."""
         ...
 
     def discard(self, req: Request) -> None:
@@ -207,9 +237,10 @@ class HostOnlyPlane:
         self.events.append(("spill", req.req_id))
         self.vmem.spill_seq(req.req_id)
 
-    def restore(self, req: Request, num_tokens: int) -> None:
+    def restore(self, req: Request, num_tokens: int,
+                shared_pages: list[int] | None = None) -> None:
         self.events.append(("restore", req.req_id))
-        self.vmem.restore_seq(req.req_id, num_tokens)
+        self.vmem.restore_seq(req.req_id, num_tokens, shared_pages)
 
     def discard(self, req: Request) -> None:
         self.events.append(("discard", req.req_id))
@@ -262,6 +293,15 @@ class Scheduler:
         #: whose whole pages are refcount-shared into forked requests.
         self.PREFIX_ID = -1
         self.plane: DataPlane | None = None
+        #: radix index over resident token runs — admission probes it and
+        #: COW-maps matched whole pages (no fork API needed).  Eviction is
+        #: wired to the vmem unmap hook so the trie tracks residency (and
+        #: therefore refcount drops) automatically.
+        self.prefix_cache: PrefixCache | None = (
+            PrefixCache(cfg.page_size) if cfg.prefix_cache else None
+        )
+        if self.prefix_cache is not None:
+            vmem.add_unmap_hook(self.prefix_cache.release)
 
     def attach_plane(self, plane: DataPlane) -> None:
         self.plane = plane
@@ -377,19 +417,52 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def attainable_pages(self) -> int:
-        """Frames preemption could EVER free: the pool minus pages pinned
-        by the resident shared prefix (never a preemption victim)."""
-        pinned = (len(self.vmem.seq(self.PREFIX_ID).pages)
-                  if self.vmem.has_seq(self.PREFIX_ID) else 0)
+        """Frames preemption could EVER free: the pool minus the DISTINCT
+        physical frames pinned by the resident shared prefix (never a
+        preemption victim).  Counted as a frame set, not per mapping —
+        a frame refcount-shared into K running sequences is still ONE
+        pinned frame, deducted once."""
+        if self.vmem.has_seq(self.PREFIX_ID):
+            pinned = len({int(p)
+                          for p in self.vmem.seq(self.PREFIX_ID).pages})
+        else:
+            pinned = 0
         return self.vmem.pool.num_pages - pinned
 
-    def _admission_unreachable(self, req: Request) -> bool:
+    def _pinned_shared_pages(self, owner: int | None, matched: int) -> int:
+        """Of the ``matched // page_size`` frames a radix hit would share
+        from ``owner``, how many are PINNED-prefix frames.
+
+        These frames already sit inside :meth:`attainable_pages`' pinned
+        deduction, so counting them against the request's own demand
+        would charge one physical frame once per sharer (the satellite-1
+        accounting bug).  Frames shared with a *non-pinned* owner are NOT
+        deducted: they must still coexist with the request's footprint
+        inside the preemptible pool, so they legitimately count."""
+        if not matched or owner is None:
+            return 0
+        if not (self.vmem.has_seq(owner)
+                and self.vmem.has_seq(self.PREFIX_ID)):
+            return 0
+        pinned = set(self.vmem.seq(self.PREFIX_ID).pages)
+        whole = matched // self.cfg.page_size
+        return sum(1 for p in self.vmem.seq(owner).pages[:whole]
+                   if p in pinned)
+
+    def _admission_unreachable(self, req: Request, matched: int = 0,
+                               owner: int | None = None) -> bool:
         """True if ``req`` could never run mapped to completion: its
-        lifetime page demand (prompt + every future token, fork sharing
-        included) exceeds what preemption can ever free, or the page-table
-        reach.  Admitting it ends either in a restore livelock (if it is
-        ever spilled) or in a degraded scratch-routed decode tail — fail
-        fast at admission instead."""
+        lifetime page demand (prompt + every future token, fork/radix
+        sharing included) exceeds what preemption can ever free, or the
+        page-table reach.  Admitting it ends either in a restore livelock
+        (if it is ever spilled) or in a degraded scratch-routed decode
+        tail — fail fast at admission instead.
+
+        The demand counts each PHYSICAL frame once: frames shared with
+        the pinned prefix (directly for forks, through the radix owner's
+        leading pages for prefix hits) are already inside the
+        :meth:`attainable_pages` deduction and cost the request nothing.
+        """
         pf = self.vmem.config.pages_for
         # The FINAL sampled token is never grown into the table — the
         # request retires inside commit_decode — so the mapped lifetime is
@@ -399,10 +472,10 @@ class Scheduler:
         if req.share_prefix:
             lifetime = self.prefix_len + len(req.prompt) + gen
             shared = self.prefix_len // self.cfg.page_size
-            own = pf(lifetime) - shared
         else:
             lifetime = len(req.prompt) + gen
-            own = pf(lifetime)
+            shared = self._pinned_shared_pages(owner, matched)
+        own = pf(lifetime) - shared
         return (lifetime > self.vmem.config.max_tokens_per_seq
                 or own > self.attainable_pages())
 
@@ -419,10 +492,25 @@ class Scheduler:
     # restore (swap-in)
     # ------------------------------------------------------------------
 
+    def _restorable_shared(self, req_id: int) -> list[int]:
+        """The spill-time pinned-prefix frames of ``req_id`` that are
+        STILL the prefix's leading frames — the portion of a restore that
+        re-shares by refcount instead of allocating.  Validated against
+        the live prefix mapping each call, so a stale provenance record
+        can only shrink the claim, never corrupt a restore."""
+        shared = self.state.spilled_shared.get(req_id)
+        if not shared or not self.vmem.has_seq(self.PREFIX_ID):
+            return []
+        pre = self.vmem.seq(self.PREFIX_ID).pages
+        if len(shared) <= len(pre) and shared == pre[:len(shared)]:
+            return list(shared)
+        return []
+
     def can_restore(self, req_id: int) -> bool:
         if req_id not in self._spilled_tokens:
             return False
-        need = self.vmem.config.pages_for(self._spilled_tokens[req_id])
+        need = (self.vmem.config.pages_for(self._spilled_tokens[req_id])
+                - len(self._restorable_shared(req_id)))
         return (self.vmem.pool.num_free >= need
                 and self.vmem.num_free_slots > 0)
 
@@ -430,15 +518,21 @@ class Scheduler:
         restored: list[Request] = []
         for _ in range(len(self.swapped)):
             req_id = self.swapped[0]
-            # Reach check: restore re-maps WITHOUT prefix sharing, so a
-            # victim spilled at ``n`` tokens needs pages_for(n) fresh
-            # frames.  If that exceeds what preemption can ever free, the
-            # FIFO head would block the swap queue until ``run(max_steps)``
-            # expires (the ROADMAP livelock) — fail it instead.
-            need = self.vmem.config.pages_for(self._spilled_tokens[req_id])
+            # Reach check, re-evaluated on every pass: the victim's
+            # pinned-prefix-shared run restores by RE-SHARING the still-
+            # resident frames (no fresh allocation), so only the unshared
+            # remainder demands frames preemption could free.  Only when
+            # that remainder can never fit is the victim truly
+            # unreachable — otherwise the FIFO head would block the swap
+            # queue until ``run(max_steps)`` expires (the ROADMAP
+            # livelock) — fail it then, and only then.
+            shared = self._restorable_shared(req_id)
+            need = (self.vmem.config.pages_for(self._spilled_tokens[req_id])
+                    - len(shared))
             if need > self.attainable_pages():
                 self.swapped.popleft()
                 self._spilled_tokens.pop(req_id)
+                self.state.spilled_shared.pop(req_id, None)
                 req = self._swap_requests.pop(req_id)
                 self.plane.discard(req)    # free the host-side swap record
                 self._fail(req, "restore")
@@ -449,7 +543,8 @@ class Scheduler:
                 break
             req = self._swap_requests[req_id]
             try:
-                self.plane.restore(req, self._spilled_tokens[req_id])
+                self.plane.restore(req, self._spilled_tokens[req_id],
+                                   shared_pages=shared or None)
             except RestoreFailure:
                 # Transient data-plane failure, raised before any side
                 # effect (the RestoreFailure contract): leave the victim
@@ -460,6 +555,10 @@ class Scheduler:
             self.swapped.popleft()
             del self._swap_requests[req_id]
             del self._spilled_tokens[req_id]
+            self.state.spilled_shared.pop(req_id, None)
+            if shared:
+                self.counters.inc("shared_restores")
+                self.counters.inc("pages_reused", len(shared))
             req.status = "running"
             self.running[req_id] = req
             self.slot_of[req_id] = self.vmem.seq(req_id).slot
@@ -489,8 +588,30 @@ class Scheduler:
             self.spill(victim)
         return True
 
+    def _pinned_prefix_frames(self, req_id: int) -> list[int]:
+        """Leading frames of ``req_id`` that ARE the pinned prefix's frames
+        (positionally identical — fork and radix sharing both preserve the
+        logical page index).  Whole shared pages are immutable while
+        refcounted and the prefix is never unmapped, so these frames stay
+        resident with identical bytes for the life of the engine: a later
+        restore may re-share them instead of demanding fresh frames."""
+        if not (self.vmem.has_seq(self.PREFIX_ID)
+                and self.vmem.has_seq(req_id)):
+            return []
+        own = self.vmem.seq(req_id).pages
+        pre = self.vmem.seq(self.PREFIX_ID).pages
+        k = 0
+        while k < min(len(own), len(pre)) and own[k] == pre[k]:
+            k += 1
+        return [int(p) for p in own[:k]]
+
     def spill(self, victim: Request) -> None:
         self._spilled_tokens[victim.req_id] = self.vmem.seq_len(victim.req_id)
+        # provenance BEFORE the plane frees the mapping: which leading
+        # frames were pinned-prefix shares (restorable by re-sharing)
+        self.state.spilled_shared[victim.req_id] = (
+            self._pinned_prefix_frames(victim.req_id)
+        )
         self.plane.spill(victim)       # copies pages out + frees the mapping
         victim.status = "swapped"
         self.swapped.append(victim.req_id)
@@ -507,30 +628,71 @@ class Scheduler:
     def required_pages(self, req: Request) -> int:
         return self.vmem.config.pages_for(len(req.prompt) + 1)
 
+    def probe_prefix(self, req: Request) -> tuple[int, int | None]:
+        """Longest radix-cached resident prefix a cold admission of
+        ``req`` could COW-share: ``(matched_tokens, owner_seq_id)``.
+
+        Page-aligned, capped so at least one prompt token survives as the
+        continuation chunk (its logits seed the first sampled token), and
+        validated against the owner's live mapping.  ``(0, None)`` for
+        explicit forks (they share through the fork path) and on a miss.
+        Pure — safe for the router to call when ranking replicas.
+        """
+        if (self.prefix_cache is None or req.share_prefix
+                or req.prefix_len or len(req.prompt) <= 1):
+            return 0, None
+        matched, owner = self.prefix_cache.match(req.prompt)
+        cap = ((len(req.prompt) - 1) // self.cfg.page_size
+               ) * self.cfg.page_size
+        matched = min(matched, cap)
+        if matched <= 0 or owner is None:
+            return 0, None
+        if not self.vmem.has_seq(owner) \
+                or self.vmem.seq_len(owner) < matched:
+            return 0, None
+        return matched, owner
+
+    def register_resident(self, seq_id: int, tokens: np.ndarray) -> None:
+        """Index an already-committed resident run in the radix cache
+        (``Engine.preload_prefix`` calls this for the pinned system
+        prefix after its KV is written)."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.register(seq_id, np.asarray(tokens))
+
     def admit(self) -> list[Request]:
         """Pop queue-front requests that fit; returns the plain-prefill
-        batch.  Forked requests have their page tables forked inline (so
+        batch.  Forked requests — and radix prefix hits, which reuse the
+        same COW machinery — have their page tables forked inline (so
         allocator state evolves in the same order as the seed engine) but
         their continuation prefills are accumulated and issued as ONE
         batched data-plane call per step (``admit_forked_batch``)."""
         admitted: list[Request] = []
-        pending: list[tuple[Request, int, tuple[int, int] | None]] = []
+        pending: list[
+            tuple[Request, int, tuple[int, int] | None, Any]] = []
         while self.queue and (
             len(self.running) + len(admitted) + len(pending)
             < self.cfg.max_batch
         ):
             req = self.queue[0]
-            if self._admission_unreachable(req):
+            matched, owner = self.probe_prefix(req)
+            if self._admission_unreachable(req, matched, owner):
                 self.queue.popleft()
                 self._fail(req, "admit")
                 continue
-            need = self.required_pages(req)
+            if matched:
+                # the matched whole pages arrive by refcount, not
+                # allocation — only the divergent remainder needs frames
+                need = (self.required_pages(req)
+                        - matched // self.cfg.page_size)
+            else:
+                need = self.required_pages(req)
             if need > self.vmem.pool.num_free:
                 # pending forks must be committed (running) before victim
                 # selection so they are preemptible, like the seed's inline
                 # admission order
                 self._flush_forked(pending)
-                if not self.preempt_for(need):
+                if not self.preempt_for(
+                        need, protect=owner if matched else None):
                     break                      # nothing left to preempt
             if req.share_prefix:
                 entry = self._fork_bookkeeping(req)
@@ -539,6 +701,14 @@ class Scheduler:
                 pending.append(entry)
                 self.queue.popleft()
                 continue
+            if matched:
+                entry = self._radix_bookkeeping(req, matched, owner)
+                if entry is not None:
+                    pending.append(entry)
+                    self.queue.popleft()
+                    continue
+                # hit could not be honored (owner raced away / pool
+                # exhausted mid-fork): fall through to cold admission
             try:
                 self.vmem.map_seq(req.req_id, len(req.prompt))
             except OutOfPagesError:
@@ -550,7 +720,7 @@ class Scheduler:
 
     def _fork_bookkeeping(
         self, req: Request
-    ) -> tuple[Request, int, tuple[int, int] | None] | None:
+    ) -> tuple[Request, int, tuple[int, int] | None, Any] | None:
         """Fork the resident prefix's page table for ``req`` (host state
         only — the data-plane call is deferred to ``_flush_forked``)."""
         page = self.cfg.page_size
@@ -571,36 +741,90 @@ class Scheduler:
             self.vmem.unmap_seq(req.req_id)    # roll the fork back cleanly
             return None
         self.counters.inc("forked_admissions")
-        return (req, self.prefix_len, tail_copy)
+        # the child's committed content is prefix+prompt; register it so
+        # later admissions can radix-match THROUGH the fork (content known
+        # only if the prefix itself was registered)
+        reg = None
+        if self.prefix_cache is not None:
+            pre = self.prefix_cache.tokens_of(self.PREFIX_ID)
+            if pre is not None and np.ndim(pre) == np.ndim(req.prompt):
+                try:
+                    reg = np.concatenate(
+                        [np.asarray(pre)[:self.prefix_len], req.prompt])
+                except ValueError:
+                    reg = None
+        return (req, self.prefix_len, tail_copy, reg)
+
+    def _radix_bookkeeping(
+        self, req: Request, matched: int, owner: int
+    ) -> tuple[Request, int, tuple[int, int] | None, Any] | None:
+        """COW-map the radix-matched whole pages of ``owner`` for ``req``
+        (host state only — the continuation prefill is deferred to
+        ``_flush_forked``).  ``req.prompt`` is sliced to the unmatched
+        chunk and ``prefix_len`` takes the matched length, so every
+        downstream length computation (``total_len``, decode positions,
+        the continuation offsets) is the forked-admission arithmetic
+        unchanged.  Returns None when the hit cannot be honored — the
+        caller falls back to cold admission."""
+        if not self.vmem.has_seq(owner) \
+                or self.vmem.seq_len(owner) < matched:
+            return None
+        full = req.prompt
+        try:
+            # page-aligned: shares matched//page_size whole pages, no tail
+            self.vmem.fork_seq(owner, req.req_id, matched)
+        except OutOfPagesError:
+            return None
+        try:
+            self.vmem.append_tokens(req.req_id, len(full) - matched)
+        except OutOfPagesError:
+            self.vmem.unmap_seq(req.req_id)    # roll the fork back cleanly
+            return None
+        req.prompt = full[matched:]
+        self.counters.inc("prefix_hits")
+        self.counters.inc("pages_reused", matched // self.cfg.page_size)
+        self.counters.inc("prefill_tokens_skipped", matched)
+        self.counters.snapshot("prefix_hit", (req.req_id, matched))
+        return (req, matched, None, full)
 
     def _flush_forked(
         self,
-        pending: list[tuple[Request, int, tuple[int, int] | None]],
+        pending: list[tuple[Request, int, tuple[int, int] | None, Any]],
     ) -> None:
-        """Run all pending forked admissions as ONE batched continuation
-        prefill and commit them to ``running`` (request order)."""
+        """Run all pending forked/radix-hit admissions as ONE batched
+        continuation prefill and commit them to ``running`` (request
+        order).  Each entry's registration tokens (the request's full
+        committed content) enter the radix cache only HERE — after the
+        plane call wrote the chunk's KV — so a same-step admission can
+        never match pages whose KV is not yet committed."""
         if not pending:
             return
         reqs = [e[0] for e in pending]
         firsts = self.plane.admit_forked_batch(
             reqs, [e[1] for e in pending], [e[2] for e in pending]
         )
-        for (req, start_len, _), first in zip(pending, firsts):
+        for (req, start_len, _, reg), first in zip(pending, firsts):
             req.status = "running"
             req.prefix_len = start_len
             req.output.append(first)
             self.running[req.req_id] = req
             self.slot_of[req.req_id] = self.vmem.seq(req.req_id).slot
+            if reg is not None and self.prefix_cache is not None:
+                self.prefix_cache.register(req.req_id, reg)
         self.counters.inc("fork_batches")
         pending.clear()
 
     def finish_prefill(self, reqs: list[Request], first_tokens: Any) -> None:
-        """Commit a plain-prefill batch: mark running, record accounting."""
+        """Commit a plain-prefill batch: mark running, record accounting.
+        The prompts enter the radix cache here — the plane call that
+        committed their KV has completed."""
         for i, r in enumerate(reqs):
             r.status = "running"
             r.output.append(np.asarray(first_tokens[i]))
             self.running[r.req_id] = r
             self.slot_of[r.req_id] = self.vmem.seq(r.req_id).slot
+            if self.prefix_cache is not None:
+                self.prefix_cache.register(r.req_id, r.prompt)
         lens = [len(r.prompt) for r in reqs]
         self.counters.inc("prefill_tokens", int(sum(lens)))
         self.counters.inc("prefill_translation_bursts", int(

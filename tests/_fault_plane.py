@@ -179,7 +179,8 @@ class FaultyDataPlane:
         self._spilled_len[req.req_id] = self.vmem.seq_len(req.req_id)
         self.vmem.spill_seq(req.req_id)
 
-    def restore(self, req: Request, num_tokens: int) -> None:
+    def restore(self, req: Request, num_tokens: int,
+                shared_pages=None) -> None:
         if self._deny_restore.get(req.req_id, 0) > 0:
             # raised BEFORE any side effect (the RestoreFailure contract)
             self._deny_restore[req.req_id] -= 1
@@ -187,7 +188,7 @@ class FaultyDataPlane:
             raise RestoreFailure(f"injected restore failure: {req.req_id}")
         assert num_tokens == self._spilled_len.pop(req.req_id)
         self.events.append(("restore", req.req_id))
-        self.vmem.restore_seq(req.req_id, num_tokens)
+        self.vmem.restore_seq(req.req_id, num_tokens, shared_pages)
 
     def discard(self, req: Request) -> None:
         self.events.append(("discard", req.req_id))
@@ -247,11 +248,12 @@ class FaultyDataPlane:
 
 
 def make_replica(page_size=4, usable_pages=15, max_pages=8, max_batch=3,
-                 max_horizon=8, schedule=(), replica_id=0):
+                 max_horizon=8, schedule=(), replica_id=0,
+                 prefix_cache=True):
     """A Scheduler wired to a FaultyDataPlane over a fresh vmem."""
     cfg = ServeConfig(page_size=page_size, num_pages=usable_pages + 1,
                       max_pages_per_seq=max_pages, max_batch=max_batch,
-                      max_horizon=max_horizon)
+                      max_horizon=max_horizon, prefix_cache=prefix_cache)
     vmem = VirtualMemory(VMemConfig(
         page_size=page_size, num_pages=usable_pages,
         max_pages_per_seq=max_pages, max_seqs=max_batch,

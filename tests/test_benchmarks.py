@@ -119,6 +119,24 @@ class TestBenchRegressSections:
         assert "[serve] host_syncs_per_token regressed" in \
             capsys.readouterr().out
 
+    def test_checked_in_trajectory_has_no_untagged_records(self):
+        """The read-as-serve fallback above is for OTHER people's old
+        files; the repo's own trajectory was migrated in place and every
+        record ``benchmarks/run.py`` appends carries ``section`` — an
+        untagged record here means ``_record_serve_trajectory`` regressed
+        (or someone hand-edited the file)."""
+        import json
+        import pathlib
+        path = (pathlib.Path(__file__).resolve().parent.parent
+                / "BENCH_serve.json")
+        if not path.exists():
+            pytest.skip("no trajectory checked in")
+        history = json.loads(path.read_text())
+        assert isinstance(history, list) and history
+        untagged = [r.get("t") for r in history if "section" not in r]
+        assert untagged == [], \
+            f"untagged BENCH_serve.json records at t={untagged}"
+
     def test_single_record_per_section_passes(self, regress, tmp_path):
         path = self._history(tmp_path, [
             {"t": "t0", "section": "serve",

@@ -131,9 +131,16 @@ class TestAutoHorizonIdentity:
         assert c.get("forked_admissions") > 0
         assert c.get("horizon_collapses") > 0          # pool pressure hit
         assert c.get("decode_horizon") > c.get("decode_dispatches")  # reopened
-        # identical policy decisions and token-for-token identical outputs
-        for name in ("preemptions", "restores", "page_faults", "completed"):
+        # Shared-page restore re-shares still-resident pinned-prefix
+        # frames for spilled fork victims, so restores demand fewer free
+        # frames than the seed engine's full re-allocation — fewer
+        # preemption cascades, never more, with everything else (page
+        # faults, completions, every token) unchanged.
+        for name in ("page_faults", "completed"):
             assert c.get(name) == ref_eng.counters.get(name), name
+        for name in ("preemptions", "restores"):
+            assert 0 < c.get(name) <= ref_eng.counters.get(name), name
+        assert c.get("shared_restores") > 0
         assert outputs(done_n) == outputs(done_r)
         new_eng.vmem.check_invariants()
 

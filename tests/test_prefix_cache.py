@@ -1,0 +1,272 @@
+"""Radix prefix-cache property suite (the ``prefix`` check.sh stage).
+
+The radix layer's correctness claims, each pinned by a property or a
+deterministic construction:
+
+  1. IDENTITY — over random multi-turn workloads (shared page-aligned
+     leading blocks, random tails, random arrival steps), a radix engine
+     delivers exactly the streams a cold engine does, for N in {1, 2}
+     router replicas.  On the fault-plane harness every stream has a
+     closed form (``expected_output``), so a single wrong fork length,
+     sliced prompt, or total-length miscount surfaces as a stream
+     mismatch.
+  2. EVICTION — registrations live exactly as long as their mapped run:
+     when every sequence retires (refcounts drop to zero, pages unmap),
+     the trie is empty and internally consistent.  No stale owner may
+     ever be matched.
+  3. ROUTING — the longest-matching-prefix score steers plain admissions
+     to the replica holding the matched pages, while true COW forks keep
+     their HARD affinity to a prefix-holding replica (the score must
+     never override the constraint).
+  4. SAMPLING — a prefix-hit admission consumes the executor PRNG stream
+     exactly like cold prefill (one split per sample call), so
+     temperature streams are bit-identical warm vs cold.  (Device test —
+     the one test here that needs jax.)
+"""
+
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # pragma: no cover
+    from _prop_fallback import given, settings, st
+
+from _fault_plane import (
+    drive,
+    drive_router,
+    expected_output,
+    make_replica,
+)
+from repro.serve import Replica, ReplicaRouter, Request
+
+pytestmark = pytest.mark.prefix
+
+PS = 4          # page size for every host-only replica here
+VOCAB = 3000
+
+
+def make_router(n, prefix_cache=True, **kw):
+    replicas, planes = [], []
+    for r in range(n):
+        sched, plane = make_replica(page_size=PS, replica_id=r,
+                                    prefix_cache=prefix_cache, **kw)
+        replicas.append(Replica(replica_id=r, scheduler=sched, plane=plane))
+        planes.append(plane)
+    return ReplicaRouter(replicas), planes
+
+
+def radix_workload(seed: int):
+    """Random multi-turn-shaped arrivals: every prompt is a random-length
+    page-aligned slice of one shared block plus a random tail, arriving
+    at a random drive step — so later requests radix-hit whatever
+    earlier ones happen to be resident, including nothing at all."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, VOCAB, size=int(rng.integers(1, 4)) * PS) \
+        .astype(np.int32)
+    submits = []
+    for i in range(int(rng.integers(3, 7))):
+        keep = int(rng.integers(0, len(base) // PS + 1)) * PS
+        tail = rng.integers(0, VOCAB, size=int(rng.integers(1, 6))) \
+            .astype(np.int32)
+        submits.append((int(rng.integers(1, 20)), Request(
+            req_id=i, prompt=np.concatenate([base[:keep], tail]),
+            max_new_tokens=int(rng.integers(2, 7)),
+        )))
+    return submits
+
+
+class TestTokenIdentityVsCold:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_radix_streams_equal_cold_streams(self, seed):
+        submits = radix_workload(seed)
+        closed_form = {r.req_id: expected_output(r) for _, r in submits}
+        for n in (1, 2):
+            outs = {}
+            for warm in (True, False):
+                router, planes = make_router(n, prefix_cache=warm)
+                steps = drive_router(
+                    router, planes,
+                    submits=[(s, copy.deepcopy(r)) for s, r in submits],
+                )
+                assert steps < 500
+                done = router.done
+                assert all(r.status == "done" for r in done.values())
+                outs[warm] = {rid: [int(x) for x in r.output]
+                              for rid, r in done.items()}
+                router.check_invariants()
+            # warm == cold == the analytic per-request stream
+            assert outs[True] == outs[False] == closed_form, f"N={n}"
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_reuse_accounting_is_consistent(self, seed):
+        """prefix_hits/pages_reused/prefill_tokens_skipped move together:
+        every hit skips >= one whole page of prefill and reuses >= one
+        frame, and skipped tokens are always whole-page multiples."""
+        sched, plane = make_replica(page_size=PS)
+        for s, r in sorted(radix_workload(seed), key=lambda e: e[0]):
+            plane._schedule = plane._schedule + [("submit", s, r)]
+            plane._fired.append(False)
+        drive(sched, plane)
+        c = sched.counters
+        hits = c.get("prefix_hits")
+        assert c.get("prefill_tokens_skipped") % PS == 0
+        assert c.get("prefill_tokens_skipped") >= hits * PS
+        assert c.get("pages_reused") >= hits
+        assert c.get("failed_unreachable") == 0
+
+
+class TestEviction:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10**6))
+    def test_trie_empties_when_refcounts_drop_to_zero(self, seed):
+        """Registration lifetime == mapped-run lifetime: after every
+        request retires (all refcounts to zero, all pages unmapped) the
+        radix trie holds no runs and no leaked nodes."""
+        sched, plane = make_replica(page_size=PS)
+        submits = [(s, copy.deepcopy(r)) for s, r in radix_workload(seed)]
+        for s, r in sorted(submits, key=lambda e: e[0]):
+            plane._schedule = plane._schedule + [("submit", s, r)]
+            plane._fired.append(False)
+        steps = drive(sched, plane)
+        assert steps < 500 and not sched.has_work
+        assert sched.vmem.num_seqs == 0          # everything retired
+        assert sched.prefix_cache.num_runs == 0
+        sched.prefix_cache.check_invariants()
+        sched.vmem.check_invariants()
+
+    def test_matched_owner_is_always_resident(self):
+        """A probe can never return an evicted owner: retire the owner,
+        and the next identical prompt must probe cold (then re-register
+        itself)."""
+        sched, plane = make_replica(page_size=PS)
+        prompt = np.arange(500, 512, dtype=np.int32)
+        sched.submit(Request(req_id=0, prompt=prompt.copy(),
+                             max_new_tokens=2))
+        drive(sched, plane)
+        assert 0 not in sched.prefix_cache       # owner retired -> evicted
+        matched, owner = sched.probe_prefix(
+            Request(req_id=1, prompt=prompt.copy(), max_new_tokens=2))
+        assert (matched, owner) == (0, None)
+        sched.submit(Request(req_id=1, prompt=prompt.copy(),
+                             max_new_tokens=2))
+        drive(sched, plane)
+        assert sched.counters.get("prefix_hits") == 0
+        assert sched.done[1].status == "done"
+        sched.prefix_cache.check_invariants()
+
+
+class TestPrefixAwareRouting:
+    PREFIX = np.arange(900, 908, dtype=np.int32)    # 2 whole pages
+
+    def _router_with_prefix_on_replica0(self):
+        router, planes = make_router(2)
+        s0 = router.replicas[0].scheduler
+        s0.vmem.map_seq(s0.PREFIX_ID, len(self.PREFIX))
+        s0.prefix_len = len(self.PREFIX)
+        s0.register_resident(s0.PREFIX_ID, self.PREFIX)
+        return router, planes
+
+    def test_matching_admission_routed_to_prefix_holder(self):
+        """Blind least-loaded would pick empty replica 1 (replica 0 holds
+        the pinned prefix pages); the prefix score must flip the choice
+        to replica 0 and count it."""
+        router, planes = self._router_with_prefix_on_replica0()
+        r = Request(req_id=0,
+                    prompt=np.concatenate([
+                        self.PREFIX, np.arange(40, 44, dtype=np.int32)]),
+                    max_new_tokens=3)
+        router.submit(r)
+        assert drive_router(router, planes) < 500
+        assert router.counters.get("placements_replica0") == 1
+        assert router.counters.get("placements_replica1") == 0
+        assert router.counters.get("prefix_routed") == 1
+        s0 = router.replicas[0].scheduler
+        assert s0.counters.get("prefix_hits") == 1
+        assert [int(x) for x in router.done[0].output] == expected_output(r)
+        router.check_invariants()
+
+    def test_non_matching_admission_stays_prefix_blind(self):
+        router, planes = self._router_with_prefix_on_replica0()
+        router.submit(Request(req_id=0,
+                              prompt=np.arange(40, 50, dtype=np.int32),
+                              max_new_tokens=3))
+        assert drive_router(router, planes) < 500
+        # least loaded: replica 1 (no pinned pages) — score added nothing
+        assert router.counters.get("placements_replica1") == 1
+        assert router.counters.get("prefix_routed") == 0
+        router.check_invariants()
+
+    def test_fork_affinity_stays_hard_over_prefix_score(self):
+        """True COW forks rank prefix-blind under the HARD constraint:
+        only prefix-holding replicas are eligible, however loaded —
+        the additive score must not reopen the constraint."""
+        router, planes = self._router_with_prefix_on_replica0()
+        # load replica 0 well above replica 1 first
+        filler = Request(req_id=0,
+                         prompt=np.concatenate([
+                             self.PREFIX,
+                             np.arange(60, 64, dtype=np.int32)]),
+                         max_new_tokens=8)
+        fork = Request(req_id=1,
+                       prompt=np.arange(70, 76, dtype=np.int32),
+                       max_new_tokens=3, share_prefix=True)
+        router.submit(filler)
+        router.submit(fork)
+        assert drive_router(router, planes) < 500
+        assert router.counters.get("placements_replica0") == 2
+        assert router.counters.get("placements_replica1") == 0
+        assert all(r.status == "done" for r in router.done.values())
+        router.check_invariants()
+
+
+class TestTemperatureStreamIdentity:
+    """Device-plane PRNG contract: a radix hit replaces ONE cold prefill
+    sample call with ONE continuation-prefill sample call, so the
+    executor's key-split sequence — and therefore every stochastic
+    token — is identical warm vs cold."""
+
+    @pytest.fixture(scope="class")
+    def model_and_params(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("qwen2-7b", reduced=True)
+        model = build_model(cfg, remat=False)
+        return cfg, model, model.init(jax.random.PRNGKey(0))
+
+    def test_prefix_hit_temperature_stream_identical_to_cold(
+            self, model_and_params):
+        from repro.serve import Engine, ServeConfig
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
+        tails = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+                 for _ in range(2)]
+        outs = {}
+        for warm in (True, False):
+            eng = Engine(model, params, ServeConfig(
+                page_size=4, num_pages=64, max_pages_per_seq=16,
+                max_batch=2, greedy=False, temperature=0.8, seed=3,
+                prefix_cache=warm,
+            ))
+            eng.preload_prefix(prefix)
+            streams = []
+            # single-request admissions: one sample call per admission on
+            # both paths keeps the split sequence aligned per request
+            for i, tail in enumerate(tails):
+                eng.submit(Request(
+                    req_id=i, prompt=np.concatenate([prefix, tail]),
+                    max_new_tokens=6))
+                done = eng.run()
+                streams.append([int(x) for x in done[i].output])
+            outs[warm] = streams
+            hits = eng.counters.get("prefix_hits")
+            assert hits == (2 if warm else 0)
+        assert outs[True] == outs[False]

@@ -142,13 +142,18 @@ class TestBatchedForkAdmission:
 
 
 class TestRestoreLivelock:
-    def test_unreachable_restore_fails_instead_of_spinning(
+    def test_spilled_fork_restores_shared_instead_of_failing(
             self, model_and_params):
         """ROADMAP regression (observed via ``repro.launch.serve
-        --prefix-len 10 --num-pages 10``): a fork spilled near the end of
-        its decode needs pages_for(len) UNSHARED frames to restore — more
-        than preemption can ever free next to the pinned 2-page prefix —
-        and pre-fix the engine spun until ``run(max_steps)`` expired."""
+        --prefix-len 10 --num-pages 10``), updated for shared-page
+        restore: a fork spilled near the end of its decode carries
+        pages_for(len) = 8 frames, one of which is the still-resident
+        pinned prefix page.  The original engine spun until
+        ``run(max_steps)`` expired; the first fix failed the victim as
+        unreachable (its UNSHARED demand of 8 exceeds the 7 attainable
+        frames); the shared restore re-shares the pinned frame by
+        refcount, scatters only the 7 unshared pages back, and the
+        request finishes."""
         cfg, model, params = model_and_params
         rng = np.random.default_rng(3)
         serve_cfg = ServeConfig(page_size=8, num_pages=10,
@@ -177,11 +182,13 @@ class TestRestoreLivelock:
         done = eng.run(max_steps=budget)
         assert eng.scheduler.step_i < budget        # terminated, no livelock
         assert not eng.scheduler.has_work
-        assert done[0].status == "failed"
+        assert done[0].status == "done"
         assert done[1].status == "done"
         assert eng.counters.get("preemptions") == 1
-        assert eng.counters.get("failed_unreachable") == 1
-        # the failed request's host-side swap record is freed, not leaked
+        assert eng.counters.get("failed_unreachable") == 0
+        assert eng.counters.get("restores") == 1
+        assert eng.counters.get("shared_restores") == 1
+        # the restored request's host-side swap record is consumed
         assert eng.switcher.swapped_out == []
         eng.vmem.check_invariants()
 

@@ -328,34 +328,63 @@ class TestFaultPlaneLivelockPorts:
         sched.prefix_len = 5
         return sched, plane
 
-    def test_restore_unreachable_victim_fails_instead_of_livelock(self):
-        """The ROADMAP livelock: restore re-maps WITHOUT prefix sharing, so
-        a fork spilled near the end of its decode needs more frames than
-        preemption can ever free next to the pinned prefix — pre-fix the
-        swap-queue head spun until max_steps.  Req 0's remaining hits 1
-        just before step 14 (output = step + 1), so the scripted late
-        arrival forces the spill at exactly the old hook's step."""
-        from _fault_plane import drive
+    def test_spilled_fork_restores_by_resharing_pinned_frames(self):
+        """The shared-page restore regression: a fork spilled near the end
+        of its decode carries pf(spilled) pages, ONE of which is the still-
+        resident pinned-prefix frame.  The old restore re-mapped without
+        prefix sharing, so its demand (8 frames here) exceeded what
+        preemption can ever free next to the pinned prefix (7) — the
+        victim was failed as unreachable even though re-sharing makes it
+        fit exactly.  Post-fix the restore re-shares the recorded pinned
+        frame by refcount, allocates only the 7-frame remainder, and the
+        request completes with its exact token stream.  Req 0's remaining
+        hits 1 just before step 14 (output = step + 1), so the scripted
+        late arrival forces the spill at exactly the old hook's step."""
+        from _fault_plane import drive, expected_output
         sched, plane = self._forked_replica(
             (("submit", 14, req(1, plen=8, max_new=4)),)
         )
-        sched.submit(req(0, plen=12, max_new=15, share_prefix=True))
+        r0 = req(0, plen=12, max_new=15, share_prefix=True)
+        sched.submit(r0)
         steps = drive(sched, plane, max_steps=200)
         assert steps < 200 and not sched.has_work    # no livelock
-        assert sched.done[0].status == "failed"
+        assert sched.done[0].status == "done"
         assert sched.done[1].status == "done"
         assert sched.counters.get("preemptions") == 1
-        assert sched.counters.get("failed_unreachable") == 1
-        # the plane was told to drop the dead swap record
-        assert ("discard", 0) in plane.events
+        assert sched.counters.get("restores") == 1
+        assert sched.counters.get("shared_restores") == 1
+        assert sched.counters.get("pages_reused") == 1
+        assert sched.counters.get("failed_unreachable") == 0
+        # the swap record was consumed by the restore, never discarded
+        assert ("discard", 0) not in plane.events
+        assert ("restore", 0) in plane.events
+        # re-sharing changed frames moved, never the stream
+        assert [int(x) for x in sched.done[0].output] == expected_output(r0)
         sched.vmem.check_invariants()
 
-    def test_grow_stall_after_unshared_restore_still_terminates(self):
-        """A spilled EARLY restores fine (small footprint) but, unshared,
-        can no longer grow to its full lifetime next to the pinned prefix.
-        Growth stalls are degraded, not deadlocked (decode proceeds with
-        scratch-routed writes, seed semantics) — the run must terminate
-        without tripping the reach checks."""
+    def test_genuinely_unreachable_lifetime_still_fails_fast(self):
+        """The failure path the re-sharing fix must NOT erode: a fork whose
+        lifetime demand exceeds pool reach even WITH its pinned-prefix
+        frame deducted (own = pf(5+12+16) - 1 = 8 > 7 attainable) is
+        failed at admission — surfaced through ``done`` so ``run()``
+        terminates instead of spinning until ``max_steps``."""
+        from _fault_plane import drive
+        sched, plane = self._forked_replica(())
+        sched.submit(req(0, plen=12, max_new=17, share_prefix=True))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.done[0].status == "failed"
+        assert sched.counters.get("failed_unreachable") == 1
+        assert sched.counters.get("preemptions") == 0
+        sched.vmem.check_invariants()
+
+    def test_grow_stall_after_restore_still_terminates(self):
+        """A fork spilled EARLY restores fine (small footprint, pinned
+        frame re-shared) but may still stall growing to its full lifetime
+        next to the pinned prefix under late arrivals.  Growth stalls are
+        degraded, not deadlocked (decode proceeds with scratch-routed
+        writes, seed semantics) — the run must terminate without tripping
+        the reach checks."""
         from _fault_plane import drive
         sched, plane = self._forked_replica(
             (("submit", 3, req(1, plen=16, max_new=4)),)
@@ -544,6 +573,82 @@ class TestBatchedForkAdmission:
         assert set(sched.running) == {0, 1, 2}
         # request-order output commit: every fork got its first token
         assert all(len(sched.running[i].output) == 1 for i in range(3))
+        sched.vmem.check_invariants()
+
+
+class TestSharedPageReachAccounting:
+    """The satellite reach-check accounting regression: each PHYSICAL
+    frame must be counted once across the pinned deduction and the
+    request's own demand.  Pre-fix, a radix-hit admission's demand was
+    ``pf(lifetime)`` with no deduction for the pinned frames it shares,
+    so an admission that fits exactly was falsely failed as unreachable;
+    symmetrically, frames shared with a NON-pinned owner must still count
+    in full (the owner is preemptible, so both footprints coexist in the
+    preemptible pool)."""
+
+    PREFIX = np.arange(100, 108, dtype=np.int32)     # 8 tokens = 2 pages
+
+    def _replica(self, schedule=()):
+        from _fault_plane import make_replica
+        return make_replica(page_size=4, usable_pages=9, max_pages=16,
+                            max_batch=3, max_horizon=1, schedule=schedule)
+
+    def test_radix_hit_sharing_pinned_frames_admits_at_exact_fit(self):
+        """pf(lifetime)=9 > attainable=7, but 2 of those 9 frames are the
+        pinned prefix frames the radix hit re-shares — own demand is 7,
+        an exact fit.  Pre-fix accounting (no pinned-shared deduction)
+        failed this admission as unreachable."""
+        from _fault_plane import drive, expected_output
+        sched, plane = self._replica()
+        sched.vmem.map_seq(sched.PREFIX_ID, len(self.PREFIX))
+        sched.prefix_len = len(self.PREFIX)
+        sched.register_resident(sched.PREFIX_ID, self.PREFIX)
+
+        prompt = np.concatenate([self.PREFIX,
+                                 np.arange(200, 204, dtype=np.int32)])
+        r = Request(req_id=0, prompt=prompt, max_new_tokens=22)
+        # the pre-fix falsity, stated on the numbers: lifetime demand
+        # counted per-sequence exceeds reach, counted per-frame it fits
+        lifetime = len(prompt) + r.max_new_tokens - 1
+        assert sched.vmem.config.pages_for(lifetime) \
+            > sched.attainable_pages()
+
+        sched.submit(r)
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("failed_unreachable") == 0
+        assert sched.done[0].status == "done"
+        assert sched.counters.get("prefix_hits") == 1
+        assert sched.counters.get("pages_reused") == 2
+        assert sched.counters.get("prefill_tokens_skipped") == 8
+        # the radix hit produced the exact cold-admission stream
+        assert [int(x) for x in sched.done[0].output] == expected_output(r)
+        sched.vmem.check_invariants()
+
+    def test_sharing_with_preemptible_owner_does_not_extend_reach(self):
+        """The false-ADMIT guard: a radix hit on a plain (non-pinned)
+        owner shares frames that preemption can reclaim, so they must
+        count fully in the child's demand — deducting them would admit a
+        request whose footprint can never be mapped alone (pf(37)=10 >
+        pool=9) and revive the restore livelock."""
+        from _fault_plane import drive
+        owner_prompt = np.arange(100, 108, dtype=np.int32)
+        child = Request(
+            req_id=1,
+            prompt=np.concatenate([owner_prompt,
+                                   np.arange(200, 204, dtype=np.int32)]),
+            max_new_tokens=26,
+        )
+        # scripted late arrival: the owner's prompt is committed (and
+        # radix-registered) before the child is probed
+        sched, plane = self._replica((("submit", 3, child),))
+        sched.submit(Request(req_id=0, prompt=owner_prompt,
+                             max_new_tokens=4))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.done[0].status == "done"
+        assert sched.done[1].status == "failed"
+        assert sched.counters.get("failed_unreachable") == 1
         sched.vmem.check_invariants()
 
 

@@ -13,12 +13,13 @@ contract).  Sections (select a subset with ``--only``):
   sharded  — executor over the ('kv','hd') serve mesh        (bench_serve_sharded)
   router   — ReplicaRouter over N engines vs N=1             (bench_serve_router)
   prefix   — radix prefix cache: multi-turn chat, warm/cold  (bench_prefix_cache)
+  quant    — int8 KV pools: accuracy envelope + bytes halved (bench_kv_quant)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-Five sections double as CI gates when explicitly selected:
+Six sections double as CI gates when explicitly selected:
   * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
     gathers at least as many bytes as the gathered-pages reference path;
   * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
@@ -45,10 +46,18 @@ Five sections double as CI gates when explicitly selected:
     skips more than half the cold engine's prefill tokens
     (``prefill_tokens_skipped / prefill_tokens_cold > 0.5``) while every
     (session, turn) stream stays token-identical to the cold-admission
-    reference.
+    reference;
+  * ``--only quant`` exits nonzero unless int8 KV pools keep the kernels
+    live (``ref_path_dispatches == 0``, ``quant_dispatches > 0`` on both
+    the single-device and mesh engines), stay token-identical to the jnp
+    ref oracle and the mesh engine, hold greedy top-1 agreement vs the
+    fp-pool engine at or above the fixed threshold, shrink bytes-per-page
+    and bytes_spilled by exactly the pool itemsize ratio (>= 2x) over the
+    SAME spilled pages, and still gather strictly fewer continuation-
+    prefill bytes than the int8 ref baseline.
 
-The serve, sharded, router and prefix sections also append their metrics
-(tagged
+The serve, sharded, router, prefix and quant sections also append their
+metrics (tagged
 with a ``section`` field) to ``BENCH_serve.json`` at the repo root — the
 machine-readable perf trajectory across PRs, which
 ``scripts/bench_regress.py`` gates on per section (counters only, never
@@ -213,6 +222,64 @@ def _prefix(gate: bool = False):
     return csv
 
 
+def _quant(gate: bool = False):
+    from benchmarks import bench_kv_quant
+    csv, metrics = bench_kv_quant.run()
+    _record_serve_trajectory(metrics, section="quant")
+    failures = []
+    if not metrics["kernels_live"]:
+        failures.append(
+            f"kernels not live under int8 pools: "
+            f"kernel={metrics['kernel_dispatches_int8']}/"
+            f"ref={metrics['ref_path_dispatches_int8']}/"
+            f"quant={metrics['quant_dispatches_int8']} single-device, "
+            f"kernel={metrics['kernel_dispatches_int8_mesh']}/"
+            f"ref={metrics['ref_path_dispatches_int8_mesh']}/"
+            f"quant={metrics['quant_dispatches_int8_mesh']} mesh "
+            "(quantization must ride the kernel dispatch, not the ref "
+            "hatch)")
+    if not metrics["token_identical_ref"]:
+        failures.append(
+            "int8 kernel tokens diverged from the int8 jnp ref oracle — "
+            "the in-kernel dequant disagrees with the differential "
+            "baseline")
+    if not metrics["token_identical_mesh"]:
+        failures.append(
+            f"int8 mesh engine ({metrics['mesh_devices']} devices) "
+            "diverged from the single-device int8 kernel stream")
+    if metrics["top1_agreement"] < metrics["agreement_threshold"]:
+        failures.append(
+            f"greedy top-1 agreement vs the fp engine = "
+            f"{metrics['top1_agreement']:.3f} (threshold "
+            f"{metrics['agreement_threshold']}: the accuracy envelope "
+            "collapsed)")
+    if not metrics["bytes_halved"]:
+        failures.append(
+            f"bytes-per-page {metrics['bytes_per_page_fp']} -> "
+            f"{metrics['bytes_per_page_int8']} is not the exact itemsize "
+            "ratio (>= 2x) — quantized pools are not actually narrow")
+    if not metrics["spill_halved"]:
+        failures.append(
+            f"bytes_spilled {metrics['bytes_spilled_fp']} -> "
+            f"{metrics['bytes_spilled_int8']} over "
+            f"{metrics['pages_spilled_fp']} vs "
+            f"{metrics['pages_spilled_int8']} pages — spills must move "
+            "the SAME pages at the itemsize-ratio fewer bytes (and the "
+            "workload must actually spill)")
+    if not metrics["bytes_win"]:
+        failures.append(
+            f"continuation prefill gathered "
+            f"{metrics['prefill_bytes_gathered_int8']} B on the int8 "
+            f"kernel path vs {metrics['prefill_bytes_gathered_int8_ref']} "
+            "B on the int8 ref path — quantization must not forfeit the "
+            "page-streaming win")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only quant: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -255,6 +322,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("prefix",
      "Radix prefix cache: multi-turn chat, warm (radix) vs cold admission",
      _prefix),
+    ("quant",
+     "Quantized int8 KV pools: accuracy envelope + bytes-per-page halving",
+     _quant),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -278,7 +348,8 @@ def main(argv: list[str] | None = None) -> None:
         if args.only is not None and key not in args.only:
             continue
         section(title)
-        if key in ("prefill", "serve", "sharded", "router", "prefix"):
+        if key in ("prefill", "serve", "sharded", "router", "prefix",
+                   "quant"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)

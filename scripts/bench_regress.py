@@ -33,8 +33,8 @@ REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
 #: per-section (name, extractor, direction): "le" = new must stay <=
 #: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
-#: ``serve``, ``sharded``, ``router`` and ``prefix`` gates (tagged with a
-#: "section" field; untagged legacy records read as ``serve`` for
+#: ``serve``, ``sharded``, ``router``, ``prefix`` and ``quant`` gates
+#: (tagged with a "section" field; untagged legacy records read as ``serve`` for
 #: backward compatibility, though the checked-in trajectory is fully
 #: tagged — ``tests/test_benchmarks.py`` asserts that), so each section
 #: is compared against its OWN previous record — never serve-vs-router.
@@ -76,6 +76,18 @@ CHECKS_BY_SECTION = {
          lambda m: float(m["prefix_hits"]), "ge"),
         ("prefill_tokens_skipped",
          lambda m: float(m["prefill_tokens_skipped"]), "ge"),
+    ),
+    # the quantized-KV gate: bytes-per-page must never creep back up
+    # (quantization silently widening), the greedy top-1 accuracy
+    # envelope vs the fp engine must never shrink, and no quantized step
+    # may slip onto the jnp twin — counters/accuracy only, never tok/s
+    "quant": (
+        ("bytes_per_page_int8",
+         lambda m: float(m["bytes_per_page_int8"]), "le"),
+        ("top1_agreement",
+         lambda m: float(m["top1_agreement"]), "ge"),
+        ("ref_path_dispatches_int8",
+         lambda m: float(m["ref_path_dispatches_int8"]), "le"),
     ),
 }
 

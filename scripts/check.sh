@@ -2,17 +2,22 @@
 # Tier-1 verification without the multi-minute sharding subprocesses:
 #   1. byte-compile the whole tree (catches syntax/indent errors fast);
 #   2. import the package surface (catches broken module wiring);
-#   3. run the kernel differential grid, the `router` suite (multi-replica
-#      fault-injection harness, fake planes — pure host policy, fail
-#      fast), the `prefix` suite (radix prefix-cache properties, host-only
-#      planes), then the `fast` pytest subset;
+#   3. run the kernel differential grid (which includes the int8
+#      dequant-in-kernel grids — they carry both `kernels` and `quant`
+#      marks), the `router` suite (multi-replica fault-injection harness,
+#      fake planes — pure host policy, fail fast), the `prefix` suite
+#      (radix prefix-cache properties, host-only planes), the non-kernel
+#      `quant` suite (spill bit-identity, engine dispatch counters), then
+#      the `fast` pytest subset;
 #   4. serve gate (`benchmarks/run.py --only serve`) + router replica-
 #      sweep gate (`--only router`: token identity vs N=1 + global-vs-
 #      per-replica accounting) + prefix-cache gate (`--only prefix`:
 #      >50% of cold prefill tokens skipped on the multi-turn chat
-#      workload, streams token-identical to cold admission) + the
-#      counter-based regression gate (`scripts/bench_regress.py` over
-#      BENCH_serve.json, per section);
+#      workload, streams token-identical to cold admission) + quant gate
+#      (`--only quant`: int8 pools keep the kernels live with the
+#      accuracy envelope held and bytes-per-page/spill bytes shrunk by
+#      the itemsize ratio) + the counter-based regression gate
+#      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
 #   5. IF >1 host device is advertised: the sharded-kernel differential
 #      subset first (fail fast if a shard_map wrapper diverges from the
 #      single-device kernel / jnp oracle), then the full `sharded` pytest
@@ -60,8 +65,11 @@ python -m pytest -q -m "router and not sharded" "$@"
 echo "== prefix-cache property suite (radix sharing, host-only planes)"
 python -m pytest -q -m "prefix and not sharded" "$@"
 
+echo "== quant suite (int8 KV differentials + spill bit-identity)"
+python -m pytest -q -m "quant and not sharded and not kernels" "$@"
+
 echo "== fast tests"
-python -m pytest -q -m "fast and not kernels and not sharded and not router and not prefix" "$@"
+python -m pytest -q -m "fast and not kernels and not sharded and not router and not prefix and not quant" "$@"
 
 echo "== serve gate (fused decode horizon must amortize host syncs)"
 python -m benchmarks.run --only serve
@@ -71,6 +79,9 @@ python -m benchmarks.run --only router
 
 echo "== prefix-cache gate (>50% prefill skipped, token-identical to cold)"
 python -m benchmarks.run --only prefix
+
+echo "== quant gate (int8 pools: kernels live, accuracy envelope, bytes halved)"
+python -m benchmarks.run --only quant
 
 echo "== serve counter regression gate (BENCH_serve.json trajectory)"
 python scripts/bench_regress.py

@@ -95,6 +95,11 @@ class ContextSwitcher:
         axis 1) directly, so the bytes moved are exactly
         ``n_victim_pages * page_bytes * 2`` — the paper's §3.1 context-switch
         cost measured in actually-moved bytes.
+
+        The gather is dtype-preserving: quantized pools spill their int8
+        bytes verbatim (no dequant–requant round trip), so
+        ``bytes_spilled`` per page shrinks by the pool itemsize ratio and
+        the restore scatter below puts the identical bits back.
         """
         state = self.vmem.seq(seq_id)
         pages = jnp.asarray(np.asarray(state.pages, dtype=np.int32))

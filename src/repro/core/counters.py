@@ -16,6 +16,18 @@ prefill was replaced by page sharing), ``shared_restores`` (restores that
 re-shared still-resident pinned-prefix frames instead of allocating), and
 the router's ``prefix_routed`` (placements where the longest-matching-
 prefix score changed the prefix-blind choice).
+
+Quantized-KV serving adds ``quant_dispatches``: compute steps whose KV
+pools were stored quantized (``ServeConfig.kv_dtype="int8"``), counted
+alongside ``kernel_dispatches`` / ``ref_path_dispatches`` so a quantized
+engine that silently lost the kernel path is visible as
+``quant_dispatches > 0`` with ``ref_path_dispatches > 0``.  The accuracy
+envelope that makes the quantized counters trustworthy is NOT a counter —
+it is measured per run by ``benchmarks/bench_kv_quant.py`` and recorded
+in the ``section:"quant"`` trajectory (``top1_agreement``: positionwise
+greedy-token agreement vs the fp-pool engine; ``logit_max_abs_err``: a
+model-level decode-logit probe), where ``scripts/bench_regress.py`` gates
+it (agreement "ge", bytes-per-page "le" — never tok/s).
 """
 
 from __future__ import annotations

@@ -6,6 +6,16 @@ rest of the framework never deals with tiling details.  Every wrapper
 dispatches to the Pallas kernel (``use_kernel=True``, default) or the pure
 jnp oracle (``use_kernel=False`` — the XLA-native path used by dry-runs).
 
+Dispatch contract: ``use_kernel`` is the ONLY thing that routes to the
+oracle.  In particular int8 pools (a non-``None`` ``kv_scale``) no longer
+force the ref path — the paged-attention kernels take the scale as a
+third scalar-prefetch operand and dequantize each K/V tile in VMEM after
+its burst lands, so quantized serving keeps the page-streaming bytes win
+(and the ``*_sharded`` wrappers thread ``kv_scale`` through their shard
+bodies, so it survives the ('kv', 'hd') mesh too).  The paged copies are
+dtype-agnostic: they move whatever element type the pool holds, so a
+quantized write is the same burst at the narrow itemsize.
+
 The Pallas kernels assume a single device's pool view (scalar-prefetched
 page tables index local frames; no partitioning annotations), so they must
 not be traced BARE into a computation laid out over a >1-device mesh.  On
@@ -144,9 +154,10 @@ paged_decode_attention = jax.jit(
     scale=None, window=None, use_kernel=True, kv_scale=None: (
         _paged_attn_kernel(
             q, k_pool, v_pool, page_table, seq_lens,
-            page_size=page_size, scale=scale, window=window
+            page_size=page_size, scale=scale, window=window,
+            kv_scale=kv_scale,
         )
-        if use_kernel and kv_scale is None
+        if use_kernel
         else ref.paged_decode_attention_ref(
             q, k_pool, v_pool, page_table, seq_lens,
             page_size=page_size, scale=scale, window=window,
@@ -180,13 +191,15 @@ def paged_prefill_attention(
     Kernel path streams KV pages per query block (one translation per
     page-bounded burst, pages above the causal diagonal skipped); the ref
     path gathers the whole logical prefix (the pre-kernel hot path, kept
-    as the differential oracle).  int8 pools (``kv_scale``) dequantize on
-    the gather path only, like ``paged_decode_attention``.
+    as the differential oracle).  int8 pools (``kv_scale``) dequantize
+    INSIDE the kernel — the scale rides in the scalar-prefetch plane and
+    tiles upcast in VMEM after the burst, so quantization keeps the
+    page-streaming bytes win instead of forcing the gather path.
     """
-    if use_kernel and kv_scale is None:
+    if use_kernel:
         return _paged_prefill_kernel(
             q, k_pool, v_pool, page_table, starts,
-            page_size=page_size, scale=scale, bq=bq,
+            page_size=page_size, scale=scale, bq=bq, kv_scale=kv_scale,
         )
     return ref.paged_prefill_attention_ref(
         q, k_pool, v_pool, page_table, starts,
@@ -411,6 +424,7 @@ def paged_decode_attention_sharded(
     scale: float | None = None,
     window: int | None = None,
     use_kernel: bool = True,
+    kv_scale: float | None = None,
 ) -> jax.Array:
     """:func:`paged_decode_attention` with per-device local-slice kernels.
 
@@ -425,6 +439,7 @@ def paged_decode_attention_sharded(
         return paged_decode_attention(
             q, k_pool, v_pool, page_table, seq_lens, page_size=page_size,
             scale=scale, window=window, use_kernel=use_kernel,
+            kv_scale=kv_scale,
         )
     kv_ax, hd_ax = _kv_axes(mesh, q.shape[1], q.shape[3])
     pool_spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
@@ -439,6 +454,7 @@ def paged_decode_attention_sharded(
         return paged_decode_attention(
             q_l, kp_l, vp_l, pt, ln, page_size=page_size,
             scale=scale, window=window, use_kernel=use_kernel,
+            kv_scale=kv_scale,
         )
 
     return _shard_map(
@@ -458,6 +474,7 @@ def paged_prefill_attention_sharded(
     scale: float | None = None,
     bq: int = 32,
     use_kernel: bool = True,
+    kv_scale: float | None = None,
 ) -> jax.Array:
     """:func:`paged_prefill_attention` over the mesh (same axis roles as
     :func:`paged_decode_attention_sharded`: 'kv' head-parallel with no
@@ -468,7 +485,7 @@ def paged_prefill_attention_sharded(
     if mesh is None or mesh.size == 1:
         return paged_prefill_attention(
             q, k_pool, v_pool, page_table, starts, page_size=page_size,
-            scale=scale, bq=bq, use_kernel=use_kernel,
+            scale=scale, bq=bq, use_kernel=use_kernel, kv_scale=kv_scale,
         )
     kv_ax, hd_ax = _kv_axes(mesh, q.shape[2], q.shape[4])
     pool_spec = jax.sharding.PartitionSpec(None, None, kv_ax, hd_ax)
@@ -482,7 +499,7 @@ def paged_prefill_attention_sharded(
             vp_l = jax.lax.all_gather(vp_l, hd_ax, axis=-1, tiled=True)
         return paged_prefill_attention(
             q_l, kp_l, vp_l, pt, st, page_size=page_size,
-            scale=scale, bq=bq, use_kernel=use_kernel,
+            scale=scale, bq=bq, use_kernel=use_kernel, kv_scale=kv_scale,
         )
 
     return _shard_map(

@@ -39,6 +39,7 @@ _NEG_INF = -1e30
 def _paged_attn_kernel(
     seq_lens_ref,      # SMEM [B]
     page_table_ref,    # SMEM [B, max_pages]  (prefetched; used by index maps)
+    kv_scale_ref,      # SMEM [1] f32 — dequant scale (1.0 when not quantized)
     q_ref,             # VMEM [1, 1, G, D]
     k_ref,             # VMEM [1, page, 1, D]  (translated burst)
     v_ref,             # VMEM [1, page, 1, D]
@@ -48,6 +49,7 @@ def _paged_attn_kernel(
     page_size: int,
     scale: float,
     window: int | None,
+    quantized: bool,
 ):
     del page_table_ref  # translation consumed by the index maps
     b, p = pl.program_id(0), pl.program_id(2)
@@ -68,6 +70,13 @@ def _paged_attn_kernel(
     def _body():
         q = q_ref[0, 0]                               # [G, D]
         k = k_ref[0, :, 0, :]                         # [page, D]
+        v = v_ref[0, :, 0, :]                         # [page, D]
+        if quantized:
+            # The burst arrived as int8 bytes; upcast in VMEM *after* the
+            # DMA so HBM traffic stays at the quantized width.  Dequantize
+            # to the query's compute dtype — same precision as the fp path.
+            k = (k.astype(jnp.float32) * kv_scale_ref[0]).astype(q.dtype)
+            v = (v.astype(jnp.float32) * kv_scale_ref[0]).astype(q.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -83,7 +92,7 @@ def _paged_attn_kernel(
         l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1, keepdims=True)
         m_ref[...] = m_new
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            pexp.astype(v_ref.dtype), v_ref[0, :, 0, :],
+            pexp.astype(v.dtype), v,
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -95,11 +104,12 @@ def _paged_attn_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("page_size", "scale", "window", "interpret")
+    jax.jit,
+    static_argnames=("page_size", "scale", "window", "kv_scale", "interpret"),
 )
 def paged_decode_attention(
     q: jax.Array,            # [B, Hkv, G, D]
-    k_pool: jax.Array,       # [P, page, Hkv, D]
+    k_pool: jax.Array,       # [P, page, Hkv, D]  (model dtype or int8)
     v_pool: jax.Array,       # [P, page, Hkv, D]
     page_table: jax.Array,   # [B, max_pages] int32
     seq_lens: jax.Array,     # [B] int32
@@ -107,9 +117,16 @@ def paged_decode_attention(
     page_size: int,
     scale: float | None = None,
     window: int | None = None,
+    kv_scale: float | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One decode step through the page table. Returns [B, Hkv, G, D]."""
+    """One decode step through the page table. Returns [B, Hkv, G, D].
+
+    When ``kv_scale`` is given the pools hold quantized integers; the
+    scale rides in the scalar-prefetch plane next to the page table and
+    each K/V tile is dequantized (``x * kv_scale``) in VMEM after its
+    burst lands — HBM moves the narrow bytes, the MXU sees ``q.dtype``.
+    """
     if interpret is None:
         interpret = should_interpret()
     b, hkv, g, d = q.shape
@@ -118,7 +135,7 @@ def paged_decode_attention(
     max_pages = page_table.shape[1]
     scale = scale if scale is not None else d ** -0.5
 
-    def kv_index(bi, h, p, seq_lens_ref, page_table_ref):
+    def kv_index(bi, h, p, seq_lens_ref, page_table_ref, *_):
         del seq_lens_ref
         # THE translation: logical page p of sequence bi -> physical frame.
         # Unmapped entries (-1) clamp to frame 0; the kernel's seq_len guard
@@ -127,7 +144,7 @@ def paged_decode_attention(
         return (frame, 0, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, hkv, max_pages),
         in_specs=[
             pl.BlockSpec((1, 1, g, d), lambda bi, h, p, *_: (bi, h, 0, 0)),
@@ -144,10 +161,11 @@ def paged_decode_attention(
     return pl.pallas_call(
         functools.partial(
             _paged_attn_kernel, page_size=page_size, scale=scale,
-            window=window,
+            window=window, quantized=kv_scale is not None,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
     )(seq_lens.astype(jnp.int32), page_table.astype(jnp.int32),
+      jnp.full((1,), 1.0 if kv_scale is None else kv_scale, jnp.float32),
       q, k_pool, v_pool)

@@ -61,6 +61,7 @@ _NEG_INF = -1e30
 def _paged_prefill_kernel(
     starts_ref,        # SMEM [B] — tokens already cached per sequence
     page_table_ref,    # SMEM [B, max_pages] (prefetched; used by index maps)
+    kv_scale_ref,      # SMEM [1] f32 — dequant scale (1.0 when not quantized)
     q_ref,             # VMEM [1, 1, bs, D]  (bs = bq * G flattened rows)
     k_ref,             # VMEM [1, page, 1, D]  (translated burst)
     v_ref,             # VMEM [1, page, 1, D]
@@ -71,6 +72,7 @@ def _paged_prefill_kernel(
     bq: int,
     group: int,
     scale: float,
+    quantized: bool,
 ):
     del page_table_ref  # translation consumed by the index maps
     b, qb, p = pl.program_id(0), pl.program_id(2), pl.program_id(3)
@@ -90,6 +92,12 @@ def _paged_prefill_kernel(
     def _body():
         q = q_ref[0, 0]                               # [bs, D]
         k = k_ref[0, :, 0, :]                         # [page, D]
+        v = v_ref[0, :, 0, :]                         # [page, D]
+        if quantized:
+            # int8 burst → upcast in VMEM after the DMA; HBM traffic is
+            # the quantized bytes, the MXU computes in the query's dtype.
+            k = (k.astype(jnp.float32) * kv_scale_ref[0]).astype(q.dtype)
+            v = (v.astype(jnp.float32) * kv_scale_ref[0]).astype(q.dtype)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -107,7 +115,7 @@ def _paged_prefill_kernel(
         l_ref[...] = l_ref[...] * alpha + pexp.sum(axis=-1, keepdims=True)
         m_ref[...] = m_new
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            pexp.astype(v_ref.dtype), v_ref[0, :, 0, :],
+            pexp.astype(v.dtype), v,
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
@@ -149,11 +157,12 @@ def pages_touched(start: int, chunk: int, max_pages: int, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("page_size", "scale", "bq", "interpret")
+    jax.jit,
+    static_argnames=("page_size", "scale", "bq", "kv_scale", "interpret"),
 )
 def paged_prefill_attention(
     q: jax.Array,            # [B, S, Hkv, G, D] chunk queries
-    k_pool: jax.Array,       # [P, page, Hkv, D]
+    k_pool: jax.Array,       # [P, page, Hkv, D]  (model dtype or int8)
     v_pool: jax.Array,       # [P, page, Hkv, D]
     page_table: jax.Array,   # [B, max_pages] int32
     starts: jax.Array,       # [B] int32 — tokens already cached per row
@@ -161,6 +170,7 @@ def paged_prefill_attention(
     page_size: int,
     scale: float | None = None,
     bq: int = 32,
+    kv_scale: float | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Chunked-prefill attention through the page table.
@@ -169,7 +179,10 @@ def paged_prefill_attention(
     ``starts[b] + t`` and attends causally over logical positions
     ``[0, starts[b] + t]`` — cache plus committed chunk prefix (the chunk's
     own KV must already be written through the table, see
-    ``ops.paged_copy_at``).  Returns [B, S, Hkv, G, D].
+    ``ops.paged_copy_at``).  When ``kv_scale`` is given the pools hold
+    quantized integers; the scale is scalar-prefetched next to the page
+    table and tiles are dequantized in VMEM after each burst lands.
+    Returns [B, S, Hkv, G, D].
     """
     if interpret is None:
         interpret = should_interpret()
@@ -188,7 +201,7 @@ def paged_prefill_attention(
         qf = jnp.pad(qf, ((0, 0), (0, 0), (0, (sp - s) * g), (0, 0)))
     bs = bq * g
 
-    def kv_index(bi, h, qb, p, starts_ref, page_table_ref):
+    def kv_index(bi, h, qb, p, starts_ref, page_table_ref, *_):
         # Pages above the block's causal diagonal are clamped to the last
         # reachable page: Pallas elides the DMA when consecutive grid steps
         # name the same block, so skipped pages cost no data burst (the
@@ -204,7 +217,7 @@ def paged_prefill_attention(
         return (frame, 0, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(b, hkv, sp // bq, max_pages),
         in_specs=[
             pl.BlockSpec((1, 1, bs, d), lambda bi, h, qb, p, *_: (bi, h, qb, 0)),
@@ -223,11 +236,12 @@ def paged_prefill_attention(
     out = pl.pallas_call(
         functools.partial(
             _paged_prefill_kernel, page_size=page_size, bq=bq, group=g,
-            scale=scale,
+            scale=scale, quantized=kv_scale is not None,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, sp * g, d), q.dtype),
         grid_spec=grid_spec,
         interpret=interpret,
     )(starts.astype(jnp.int32), page_table.astype(jnp.int32),
+      jnp.full((1,), 1.0 if kv_scale is None else kv_scale, jnp.float32),
       qf, k_pool, v_pool)
     return out[:, :, : s * g].reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4)

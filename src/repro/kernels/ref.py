@@ -144,9 +144,12 @@ def paged_decode_attention_ref(
     max_t = max_pages * page_size
     k_log = k_log.reshape(b, max_t, hkv, d)
     v_log = v_log.reshape(b, max_t, hkv, d)
-    if kv_scale is not None:  # int8 dequantization
-        k_log = k_log.astype(jnp.float32) * kv_scale
-        v_log = v_log.astype(jnp.float32) * kv_scale
+    if kv_scale is not None:
+        # int8 dequantization, rounded to the model compute dtype — the
+        # same precision the kernel's in-VMEM upcast lands on, so fp-pool
+        # and int8-pool paths are compared like for like.
+        k_log = (k_log.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        v_log = (v_log.astype(jnp.float32) * kv_scale).astype(q.dtype)
     s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32),
                    k_log.astype(jnp.float32)) * scale
     pos = jnp.arange(max_t)[None, :]
@@ -189,9 +192,11 @@ def paged_prefill_attention_ref(
     frames = jnp.maximum(page_table, 0)                      # [B, maxp]
     k_log = k_pool[frames].reshape(b, max_t, hkv, d)
     v_log = v_pool[frames].reshape(b, max_t, hkv, d)
-    if kv_scale is not None:  # int8 dequantization
-        k_log = k_log.astype(jnp.float32) * kv_scale
-        v_log = v_log.astype(jnp.float32) * kv_scale
+    if kv_scale is not None:
+        # int8 dequantization at model compute precision (see the decode
+        # oracle above)
+        k_log = (k_log.astype(jnp.float32) * kv_scale).astype(q.dtype)
+        v_log = (v_log.astype(jnp.float32) * kv_scale).astype(q.dtype)
     positions = starts[:b, None] + jnp.arange(s)[None, :]    # [B, S]
     k_pos = jnp.arange(max_t)[None, None, :]                 # [1,1,maxT]
     causal = k_pos <= positions[:, :, None]                  # [B,S,maxT]

@@ -63,6 +63,13 @@ def main() -> None:
                          "step through the jnp reference twin instead of "
                          "the Pallas kernels (counted as "
                          "ref_path_dispatches in the final stats)")
+    ap.add_argument("--kv-dtype", choices=("native", "int8"),
+                    default="native",
+                    help="KV pool storage dtype: int8 stores quantized "
+                         "pages (doubling+ effective pool reach, shrinking "
+                         "spill bytes by the itemsize ratio); the paged-"
+                         "attention kernels dequantize in VMEM, so the "
+                         "kernel path stays live (quant_dispatches)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -94,6 +101,7 @@ def main() -> None:
         max_horizon=args.max_horizon,
         use_ref_path=args.no_kernels,
         prefix_cache=not args.no_prefix_cache,
+        kv_dtype=args.kv_dtype,
     )
     engines = [Engine(model, params, serve_cfg, mesh=mesh)
                for _ in range(max(1, args.replicas))]
@@ -160,6 +168,11 @@ def main() -> None:
           f"{c.get('ref_path_dispatches')} ref-path compute steps, "
           f"{c.get('prefill_bytes_gathered')} B continuation-prefill KV "
           f"gathered")
+    kp, vp = eng.kv.k_pools, eng.kv.v_pools
+    per_page = (int(kp.nbytes) + int(vp.nbytes)) // kp.shape[1]
+    print(f"  kv pools: dtype={kp.dtype} ({args.kv_dtype}), "
+          f"{per_page} B/page across {kp.shape[1]} frames, "
+          f"{c.get('quant_dispatches')} quantized compute steps")
     print(f"  fused decode horizon: mean "
           f"{c.get('decode_horizon') / max(c.get('decode_dispatches'), 1):.2f}"
           f" over {c.get('decode_dispatches')} dispatches, "

@@ -390,27 +390,33 @@ class TransformerLM:
 
         def layer(block_p, x, k_pool, v_pool, is_moe):
             q, k, v = self._block_serve_qkv(block_p, x, positions)
-            # unit-stride burst write through the page table (C2-burst)
+            # unit-stride burst write through the page table (C2-burst).
+            # The pool copy stores the POOL's dtype: quantized under int8
+            # (the copies are dtype-agnostic, so the burst itself narrows),
+            # while the chunk's own flash attention below keeps the raw
+            # activations — quantization error only enters once pages are
+            # re-read through the paged-attention kernels.
+            kq, vq = self._kv_quant(k), self._kv_quant(v)
             if mesh is not None:
                 # shard_map dispatch: 4-D natural layout to the boundary,
                 # merged-W reshape happens shard-locally (kernels/ops.py)
                 k_pool = ops.paged_copy_sharded(
-                    k, k_pool, state.page_table, prompt_lens,
+                    kq, k_pool, state.page_table, prompt_lens,
                     page_size=page, mesh=mesh,
                 )
                 v_pool = ops.paged_copy_sharded(
-                    v, v_pool, state.page_table, prompt_lens,
+                    vq, v_pool, state.page_table, prompt_lens,
                     page_size=page, mesh=mesh,
                 )
             else:
                 k_pool = ops.paged_copy(
-                    k.reshape(b, s, hkv * hd),
+                    kq.reshape(b, s, hkv * hd),
                     k_pool.reshape(-1, page, hkv * hd),
                     state.page_table, prompt_lens, page_size=page,
                     use_kernel=self.use_kernels,
                 ).reshape(k_pool.shape)
                 v_pool = ops.paged_copy(
-                    v.reshape(b, s, hkv * hd),
+                    vq.reshape(b, s, hkv * hd),
                     v_pool.reshape(-1, page, hkv * hd),
                     state.page_table, prompt_lens, page_size=page,
                     use_kernel=self.use_kernels,
@@ -521,16 +527,16 @@ class TransformerLM:
                     use_kernel=self.use_kernels,
                 ).reshape(v_pool.shape)
             # attend through the page table: causal mask on absolute
-            # positions (cache + committed chunk prefix)
-            if mesh is not None and kv_scale is None:
+            # positions (cache + committed chunk prefix).  int8 pools ride
+            # the same kernel dispatch — kv_scale is a scalar-prefetch
+            # operand and the tiles dequantize in VMEM (kernels/ops.py).
+            if mesh is not None:
                 o = ops.paged_prefill_attention_sharded(
                     q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
                     state.page_table, start_lens, page_size=page, mesh=mesh,
+                    kv_scale=kv_scale,
                 )
             else:
-                # int8 pools dequantize on the jnp gather path only — the
-                # kernel gate in ops keeps that ref path even with
-                # use_kernels on, and GSPMD partitions it freely
                 o = ops.paged_prefill_attention(
                     q.reshape(b, s, hkv, g, hd), k_pool, v_pool,
                     state.page_table, start_lens, page_size=page,
@@ -616,10 +622,10 @@ class TransformerLM:
             qh = q[:, 0].reshape(b, hkv, g, hd)
             kv_scale = (1.0 / self.KV_INT8_SCALE
                         if self.kv_dtype == "int8" else None)
-            if mesh is not None and kv_scale is None:
+            if mesh is not None:
                 o = ops.paged_decode_attention_sharded(
                     qh, k_pool, v_pool, state.page_table, new_lens,
-                    page_size=page, mesh=mesh,
+                    page_size=page, mesh=mesh, kv_scale=kv_scale,
                 )
             else:
                 o = ops.paged_decode_attention(

@@ -183,6 +183,24 @@ def _ref_path_model(model: TransformerLM) -> TransformerLM:
 
 
 @functools.lru_cache(maxsize=None)
+def _kv_dtype_model(model: TransformerLM, kv_dtype: str) -> TransformerLM:
+    """KV-storage twin (``ServeConfig.kv_dtype``).
+
+    A shallow copy with ``kv_dtype`` rebound: ``init_kv_state`` then
+    allocates quantized pools and every serve path quantizes its writes /
+    passes ``kv_scale`` into the paged-attention kernels (which dequantize
+    in VMEM — int8 no longer routes to the ref path).  Composes with the
+    other twins: the ref-path and mesh rebinds below copy whatever model
+    they are handed, so the storage dtype survives them.  Cached per
+    (model, dtype) so engines over the same pair share jit traces.
+    """
+    import copy
+    twin = copy.copy(model)
+    twin.kv_dtype = kv_dtype
+    return twin
+
+
+@functools.lru_cache(maxsize=None)
 def _mesh_kernel_model(model: TransformerLM, mesh) -> TransformerLM:
     """Mesh-bound kernel twin: the Pallas paths stay LIVE under sharding.
 
@@ -286,6 +304,13 @@ class Executor:
     def __init__(self, model: TransformerLM, params: Any, cfg: ServeConfig,
                  vmem: VirtualMemory, cost: CostModel | None = None,
                  counters: PerfCounters | None = None, mesh=None):
+        kv_dtype = getattr(cfg, "kv_dtype", "native")
+        if kv_dtype != "native" and getattr(
+                model, "kv_dtype", "native") != kv_dtype:
+            # quantized-pool twin FIRST: pool allocation below and every
+            # later twin (ref path, mesh) derive from it, so the storage
+            # dtype is a single config knob
+            model = _kv_dtype_model(model, kv_dtype)
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -406,11 +431,18 @@ class Executor:
         """Kernel-vs-ref observability, once per compute step: the silent
         mesh fallback this counter made loud is gone, so in any gated run
         ``ref_path_dispatches`` must be 0 unless the explicit escape hatch
-        (``ServeConfig.use_ref_path``) asked for the jnp twin."""
+        (``ServeConfig.use_ref_path``) asked for the jnp twin.  Quantized
+        pools dispatch the SAME kernels (dequant-in-kernel), so int8 steps
+        count as ``kernel_dispatches`` too; ``quant_dispatches`` tracks
+        how many compute steps ran over quantized pools regardless of
+        path, making "quantization silently fell back" as observable as
+        the mesh fallback was."""
         if self._ref_path:
             self.counters.inc("ref_path_dispatches")
         elif getattr(self._step_model, "use_kernels", False):
             self.counters.inc("kernel_dispatches")
+        if getattr(self._step_model, "kv_dtype", "native") != "native":
+            self.counters.inc("quant_dispatches")
 
     def _continuation_gather_bytes(self, start_lens, smax: int,
                                    nrows: int) -> int:

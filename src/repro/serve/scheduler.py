@@ -90,6 +90,14 @@ class ServeConfig:
     #: through the twin is counted as ``ref_path_dispatches`` so fallback
     #: is observable, not silent.
     use_ref_path: bool = False
+    #: KV pool storage dtype: "native" keeps the model compute dtype;
+    #: "int8" makes the executor bind a quantized-pool model twin — pools
+    #: allocate int8 under the same shardings, writes quantize, and the
+    #: paged-attention kernels dequantize in VMEM (the scale rides the
+    #: scalar-prefetch plane), so the kernel path stays live
+    #: (``quant_dispatches`` counts it).  Spill/restore then moves the
+    #: narrow bytes verbatim.  ``--kv-dtype`` in launch.serve.
+    kv_dtype: str = "native"
     #: global radix prefix cache: admissions whose leading whole pages
     #: match a resident registered run are COW-mapped from the owner and
     #: prefill skips the matched tokens (continuation path).  Token

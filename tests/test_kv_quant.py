@@ -1,0 +1,363 @@
+"""Quantized int8 KV-pool suite (marker: ``quant``).
+
+Four contracts of the dequant-in-kernel quantization path:
+
+  1. DIFFERENTIAL (``quant`` + ``kernels``) — the decode and prefill Pallas
+     kernels reading int8 pools with a scalar ``kv_scale`` in the prefetch
+     plane must match the jnp oracle bit-for-bit in policy (same dequant,
+     same online softmax) across page size x GQA x start/length offsets,
+     including a bf16-query variant pinning the oracle's upcast-to-q.dtype
+     behaviour (a hard-coded float32 dequant would diverge there).
+  2. SHARDED (``quant`` + ``kernels`` + ``sharded``) — the same grids
+     through the shard_map wrappers over a real ('kv', 'hd') mesh: int8
+     pools shard like fp pools and the replicated ``kv_scale`` survives
+     into every shard body.
+  3. SPILL BIT-IDENTITY (``quant``) — ``ContextSwitcher.spill_kv`` /
+     ``restore_kv`` move quantized pages VERBATIM: the swap record is
+     int8, ``bytes_spilled`` counts narrow bytes exactly
+     (``2 * n_pages * page_bytes_int8``, a 4x cut vs a float32 pool), and
+     the restored frames are bit-identical — no dequant-requant round
+     trip anywhere in the preemption path.
+  4. ENGINE DISPATCH (``quant``) — an engine handed a natively-built model
+     plus ``ServeConfig(kv_dtype="int8")`` rebinds through the cached
+     kv-dtype twin: pools come out int8, every step still dispatches the
+     kernels (``ref_path_dispatches == 0``), ``quant_dispatches`` tracks
+     every quantized step, and the outputs are token-identical to an
+     engine whose model was built with ``kv_dtype="int8"`` directly.
+
+Run just this suite:  PYTHONPATH=src python -m pytest -q -m quant
+"""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import VirtualMemory, VMemConfig
+from repro.core.context_switch import ContextSwitcher
+from repro.kernels import ops
+from repro.models import build_model
+from repro.models.transformer import TransformerLM
+from repro.serve import Engine, Request, ServeConfig
+
+pytestmark = pytest.mark.quant
+
+KEY = jax.random.PRNGKey(11)
+
+#: the serving fixed-point scale (transformer.py quantizes with
+#: round(x * 24) so the oracle/kernel pair must agree under the inverse)
+KV_SCALE = 1.0 / TransformerLM.KV_INT8_SCALE
+
+
+def make_int8_case(page_size, lens_or_starts, chunks=None, *, hkv=2, g=2,
+                   d=16, extra_frames=3, q_dtype=jnp.float32, seed=0):
+    """Random INT8 pools + a shuffled page table.
+
+    ``chunks is None`` builds a decode case (``lens_or_starts`` are seq
+    lens, q is [B, Hkv, G, D]); otherwise a prefill case (starts + chunk
+    lens, q is [B, S, Hkv, G, D]).  Pool values span the full int8 range
+    so the dequant multiply is load-bearing, not a no-op near zero.
+    """
+    lens = np.asarray(lens_or_starts, np.int32)
+    b = len(lens)
+    totals = lens if chunks is None else lens + np.asarray(chunks, np.int32)
+    max_pages = int(max(-(-int(t) // page_size) for t in totals)) + 1
+    n_frames = b * max_pages + extra_frames
+    rng = np.random.default_rng(seed)
+    k_pool = jnp.asarray(rng.integers(
+        -127, 128, size=(n_frames, page_size, hkv, d)), jnp.int8)
+    v_pool = jnp.asarray(rng.integers(
+        -127, 128, size=(n_frames, page_size, hkv, d)), jnp.int8)
+    frames = rng.permutation(n_frames)
+    table = np.full((b, max_pages), -1, np.int32)
+    fi = 0
+    for row in range(b):
+        need = -(-int(totals[row]) // page_size)
+        table[row, :need] = frames[fi: fi + need]
+        fi += need
+    key = jax.random.fold_in(KEY, seed)
+    if chunks is None:
+        q = jax.random.normal(key, (b, hkv, g, d), jnp.float32)
+    else:
+        s = int(np.max(chunks))
+        q = jax.random.normal(key, (b, s, hkv, g, d), jnp.float32)
+    return (q.astype(q_dtype), k_pool, v_pool, jnp.asarray(table),
+            jnp.asarray(lens))
+
+
+@pytest.mark.kernels
+class TestInt8DecodeDifferential:
+    """Decode kernel vs oracle over int8 pools (rides the fail-fast
+    ``kernels`` stage in scripts/check.sh)."""
+
+    @pytest.mark.parametrize("page_size", [4, 8, 16])
+    @pytest.mark.parametrize("lens", [[1, 5, 9], [16, 3, 31]])
+    def test_matches_ref(self, page_size, lens):
+        q, kp, vp, table, seq_lens = make_int8_case(
+            page_size, lens, seed=page_size)
+        out_k = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=page_size,
+            kv_scale=KV_SCALE, use_kernel=True)
+        out_r = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=page_size,
+            kv_scale=KV_SCALE, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("hkv,g", [(1, 4), (2, 2), (4, 1)])
+    def test_gqa_shapes(self, hkv, g):
+        q, kp, vp, table, seq_lens = make_int8_case(
+            8, [7, 12], hkv=hkv, g=g, seed=hkv * 10 + g)
+        out_k = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=8,
+            kv_scale=KV_SCALE, use_kernel=True)
+        out_r = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=8,
+            kv_scale=KV_SCALE, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), rtol=2e-5, atol=2e-5)
+
+    def test_fp_path_unchanged_by_quant_plumbing(self):
+        """kv_scale=None on fp pools must still match the oracle — the
+        static ``quantized`` flag keeps the fp kernel body bit-unchanged."""
+        rng = np.random.default_rng(0)
+        q, kp, vp, table, seq_lens = make_int8_case(4, [6, 10], seed=1)
+        kp = jnp.asarray(rng.normal(size=kp.shape), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=vp.shape), jnp.float32)
+        out_k = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=4, use_kernel=True)
+        out_r = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=4, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.kernels
+class TestInt8PrefillDifferential:
+    """Chunked-prefill kernel vs oracle over int8 pools, including offsets
+    mid-page and chunks spanning page boundaries."""
+
+    @pytest.mark.parametrize("page_size", [4, 8])
+    @pytest.mark.parametrize("start,chunk", [(0, 8), (2, 5), (5, 17), (16, 1)])
+    def test_matches_ref(self, page_size, start, chunk):
+        starts = [start, max(0, start - 1)]
+        chunks = [chunk, chunk + 1]
+        q, kp, vp, table, st = make_int8_case(
+            page_size, starts, chunks, seed=start * 31 + chunk)
+        out_k = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=page_size,
+            kv_scale=KV_SCALE, use_kernel=True, bq=4)
+        out_r = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=page_size,
+            kv_scale=KV_SCALE, use_kernel=False)
+        for row, c in enumerate(chunks):
+            np.testing.assert_allclose(
+                np.asarray(out_k)[row, :c], np.asarray(out_r)[row, :c],
+                rtol=2e-5, atol=2e-5, err_msg=f"row {row}")
+
+    def test_bf16_query_pins_ref_upcast(self):
+        """bf16 queries: the oracle dequantizes THROUGH float32 but lands
+        on q.dtype (bf16) before the dots — exactly what the kernel does
+        in VMEM.  A ref that hard-cast dequantized KV to float32 would
+        run its dots in a wider dtype than the kernel and drift well past
+        bf16 resolution here."""
+        q, kp, vp, table, st = make_int8_case(
+            4, [2, 0], [6, 9], q_dtype=jnp.bfloat16, seed=5)
+        out_k = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=4,
+            kv_scale=KV_SCALE, use_kernel=True, bq=4)
+        out_r = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=4,
+            kv_scale=KV_SCALE, use_kernel=False)
+        assert out_k.dtype == out_r.dtype == jnp.bfloat16
+        for row, c in enumerate([6, 9]):
+            np.testing.assert_allclose(
+                np.asarray(out_k, jnp.float32)[row, :c],
+                np.asarray(out_r, jnp.float32)[row, :c],
+                rtol=2e-2, atol=2e-2, err_msg=f"row {row}")
+
+
+@pytest.mark.kernels
+@pytest.mark.sharded
+@pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 XLA device; set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+class TestInt8Sharded:
+    """int8 grids through the ('kv', 'hd') shard_map wrappers: the
+    replicated scalar kv_scale must reach every shard body and the
+    sharded output must equal the single-device kernel AND the oracle."""
+
+    HKV, G, D = 2, 2, 16  # 8 forced host devices factor as a full 2x4 mesh
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        from repro.launch.mesh import make_host_serve_mesh
+        m = make_host_serve_mesh(self.HKV, self.D)
+        assert m.size > 1
+        return m
+
+    def test_decode_three_way_identity(self, mesh):
+        q, kp, vp, table, seq_lens = make_int8_case(
+            8, [5, 13, 20], hkv=self.HKV, g=self.G, d=self.D, seed=2)
+        out_s = ops.paged_decode_attention_sharded(
+            q, kp, vp, table, seq_lens, page_size=8, mesh=mesh,
+            kv_scale=KV_SCALE, use_kernel=True)
+        out_k = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=8,
+            kv_scale=KV_SCALE, use_kernel=True)
+        out_r = ops.paged_decode_attention(
+            q, kp, vp, table, seq_lens, page_size=8,
+            kv_scale=KV_SCALE, use_kernel=False)
+        np.testing.assert_allclose(
+            np.asarray(out_s), np.asarray(out_k), rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(
+            np.asarray(out_s), np.asarray(out_r), rtol=2e-5, atol=2e-5)
+
+    def test_prefill_three_way_identity(self, mesh):
+        q, kp, vp, table, st = make_int8_case(
+            4, [2, 6], [9, 5], hkv=self.HKV, g=self.G, d=self.D, seed=3)
+        out_s = ops.paged_prefill_attention_sharded(
+            q, kp, vp, table, st, page_size=4, mesh=mesh,
+            kv_scale=KV_SCALE, use_kernel=True, bq=4)
+        out_k = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=4,
+            kv_scale=KV_SCALE, use_kernel=True, bq=4)
+        out_r = ops.paged_prefill_attention(
+            q, kp, vp, table, st, page_size=4,
+            kv_scale=KV_SCALE, use_kernel=False)
+        for row, c in enumerate([9, 5]):
+            np.testing.assert_allclose(
+                np.asarray(out_s)[row, :c], np.asarray(out_k)[row, :c],
+                rtol=2e-5, atol=2e-5, err_msg=f"row {row} vs kernel")
+            np.testing.assert_allclose(
+                np.asarray(out_s)[row, :c], np.asarray(out_r)[row, :c],
+                rtol=2e-5, atol=2e-5, err_msg=f"row {row} vs ref")
+
+
+class TestSpillBitIdentity:
+    """spill_kv/restore_kv over int8 pools: narrow bytes verbatim."""
+
+    def test_round_trip_bit_identical_and_bytes_exact(self):
+        L, hkv, d = 2, 2, 4
+        cfg = VMemConfig(page_size=4, num_pages=8, max_pages_per_seq=4,
+                         max_seqs=3)
+        vm = VirtualMemory(cfg)
+        vm.map_seq(0, 10)                       # -> 3 pages
+        n_pages = len(vm.seq(0).pages)
+        rng = np.random.default_rng(7)
+        shape = (L, cfg.num_pages, cfg.page_size, hkv, d)
+        k_pools = jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8)
+        v_pools = jnp.asarray(rng.integers(-127, 128, size=shape), jnp.int8)
+        old_pages = np.asarray(vm.seq(0).pages, np.int32)
+        k_before = np.asarray(jnp.take(k_pools, jnp.asarray(old_pages),
+                                       axis=1))
+        v_before = np.asarray(jnp.take(v_pools, jnp.asarray(old_pages),
+                                       axis=1))
+
+        cs = ContextSwitcher(vm, page_axis=1)
+        cs.spill_kv(0, k_pools, v_pools, extra_state="sampler")
+
+        # the swap record holds the quantized bytes, never a widened copy
+        assert cs._swap[0].page_data.dtype == np.int8
+        page_bytes_int8 = L * cfg.page_size * hkv * d  # itemsize 1
+        assert cs.stats.bytes_spilled == 2 * n_pages * page_bytes_int8
+        # vs a float32 pool of the same geometry: exactly 4x fewer bytes
+        assert 4 * cs.stats.bytes_spilled == 2 * n_pages * (
+            L * cfg.page_size * hkv * d * 4)
+
+        # dirty the freed frames and force a re-framing before restore
+        k_pools = jnp.zeros_like(k_pools)
+        v_pools = jnp.zeros_like(v_pools)
+        vm.map_seq(5, 8)
+        k_pools, v_pools, extra = cs.restore_kv(0, k_pools, v_pools)
+        assert extra == "sampler"
+        new_pages = np.asarray(vm.seq(0).pages, np.int32)
+        assert list(new_pages) != list(old_pages)  # landed on new frames
+        np.testing.assert_array_equal(
+            np.asarray(jnp.take(k_pools, jnp.asarray(new_pages), axis=1)),
+            k_before)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.take(v_pools, jnp.asarray(new_pages), axis=1)),
+            v_before)
+        assert cs.stats.bytes_restored == cs.stats.bytes_spilled
+        vm.check_invariants()
+
+
+class TestEngineDispatch:
+    """ServeConfig(kv_dtype="int8") + a native model: the executor's
+    kv-dtype twin must quantize the pools and KEEP the kernels live."""
+
+    @pytest.fixture(scope="class")
+    def cfg_model_params(self):
+        cfg = get_config("qwen2-7b", reduced=True)
+        model = build_model(cfg, remat=False, use_kernels=True)
+        return cfg, model, model.init(KEY)
+
+    def _workload(self, cfg, n=4, seed=13, max_new=8):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(req_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 12)))
+                    .astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)
+        ]
+
+    def _run(self, model, params, serve_cfg, reqs):
+        eng = Engine(model, params, serve_cfg)
+        for r in reqs:
+            eng.submit(copy.deepcopy(r))
+        done = eng.run()
+        return eng, done
+
+    def test_int8_pools_kernels_live_counters(self, cfg_model_params):
+        cfg, model, params = cfg_model_params
+        serve_cfg = ServeConfig(page_size=4, num_pages=32,
+                                max_pages_per_seq=8, max_batch=4,
+                                kv_dtype="int8")
+        eng, done = self._run(model, params, serve_cfg,
+                              self._workload(cfg))
+        assert eng.kv.k_pools.dtype == jnp.int8
+        assert eng.kv.v_pools.dtype == jnp.int8
+        assert eng.counters.get("ref_path_dispatches") == 0
+        assert eng.counters.get("kernel_dispatches") > 0
+        # every step was quantized AND kernel-dispatched — the counter
+        # that makes a silent fallback (either direction) observable
+        assert eng.counters.get("quant_dispatches") == \
+            eng.counters.get("kernel_dispatches")
+        assert all(len(r.output) > 0 for r in done.values())
+
+    def test_twin_matches_explicitly_quantized_model(self, cfg_model_params):
+        """The cached kv-dtype twin is a rebind, not a different model:
+        outputs must be token-identical to building with kv_dtype="int8"."""
+        cfg, model, params = cfg_model_params
+        reqs = self._workload(cfg, seed=29)
+        serve_cfg = ServeConfig(page_size=4, num_pages=32,
+                                max_pages_per_seq=8, max_batch=4,
+                                kv_dtype="int8")
+        model_q = build_model(cfg, remat=False, use_kernels=True,
+                              kv_dtype="int8")
+        _, done_twin = self._run(model, params, serve_cfg, reqs)
+        _, done_direct = self._run(model_q, params, serve_cfg, reqs)
+        assert len(done_twin) == len(done_direct) == len(reqs)
+        for i in range(len(reqs)):
+            assert [int(x) for x in done_twin[i].output] == \
+                [int(x) for x in done_direct[i].output], i
+
+    def test_native_default_stays_native(self, cfg_model_params):
+        """Default ServeConfig must not quantize anything: fp pools, zero
+        quant_dispatches — the twin only binds on an explicit opt-in."""
+        cfg, model, params = cfg_model_params
+        serve_cfg = ServeConfig(page_size=4, num_pages=32,
+                                max_pages_per_seq=8, max_batch=4)
+        eng, _ = self._run(model, params, serve_cfg,
+                           self._workload(cfg, n=2, max_new=4))
+        assert eng.kv.k_pools.dtype != jnp.int8
+        assert eng.counters.get("quant_dispatches") == 0
+        assert eng.counters.get("ref_path_dispatches") == 0

@@ -52,15 +52,15 @@ AGREEMENT_THRESHOLD = 0.5   # measured 0.675 on this fixed workload; a
 
 
 def _workload(cfg, n=5, seed=0, max_new=16):
-    from repro.serve import Request
+    from repro.serve import ServeRequest
 
     r = np.random.default_rng(seed)
     return [
-        Request(req_id=i,
-                prompt=r.integers(0, cfg.vocab_size,
-                                  size=int(r.integers(4, 11))
-                                  ).astype(np.int32),
-                max_new_tokens=max_new, share_prefix=True)
+        ServeRequest(req_id=i,
+                     prompt=r.integers(0, cfg.vocab_size,
+                                       size=int(r.integers(4, 11))
+                                       ).astype(np.int32),
+                     max_new_tokens=max_new, share_prefix=True)
         for i in range(n)
     ]
 

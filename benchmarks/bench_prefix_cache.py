@@ -45,7 +45,7 @@ def _chat(engine, cfg, rng_seed: int) -> dict[tuple[int, int], list[int]]:
     """Drive S sessions x T turns through ``engine``, each turn's prompt
     the session transcript so far, and return the per-turn streams."""
     rng = np.random.default_rng(rng_seed)
-    from repro.serve import Request
+    from repro.serve import ServeRequest
 
     # identical user messages for every engine: the generator is seeded,
     # and replies are appended from the engine's OWN outputs
@@ -64,8 +64,8 @@ def _chat(engine, cfg, rng_seed: int) -> dict[tuple[int, int], list[int]]:
         for s in range(SESSIONS):
             transcript[s].append(user[(s, t)])
             prompt = np.concatenate(transcript[s])
-            engine.submit(Request(req_id=req_id, prompt=prompt,
-                                  max_new_tokens=MAX_NEW))
+            engine.submit(ServeRequest(req_id=req_id, prompt=prompt,
+                                       max_new_tokens=MAX_NEW))
             done = engine.run()
             out = [int(x) for x in done[req_id].output]
             streams[(s, t)] = out

@@ -46,15 +46,15 @@ from benchmarks.bench_serve_throughput import _drive, _warm
 
 
 def _fork_workload(cfg, n=5, seed=17, max_new=10):
-    from repro.serve import Request
+    from repro.serve import ServeRequest
 
     rng = np.random.default_rng(seed)
     return [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(4, 10))
-                                    ).astype(np.int32),
-                max_new_tokens=max_new, share_prefix=True)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(4, 10))
+                                         ).astype(np.int32),
+                     max_new_tokens=max_new, share_prefix=True)
         for i in range(n)
     ]
 

@@ -38,22 +38,29 @@ import numpy as np
 
 
 def _workload(cfg, n=6, seed=0, max_new=12):
-    from repro.serve import Request
+    from repro.serve import ServeRequest
 
     rng = np.random.default_rng(seed)
     return [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(6, 16))
-                                    ).astype(np.int32),
-                max_new_tokens=max_new)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(6, 16))
+                                         ).astype(np.int32),
+                     max_new_tokens=max_new)
         for i in range(n)
     ]
 
 
 def _drive(eng, reqs):
+    from repro.serve import ReferenceEngine
+    from repro.serve.api import to_internal
+
     for r in reqs:
-        eng.submit(copy.deepcopy(r))
+        r = copy.deepcopy(r)
+        # the frozen seed engine predates the typed client surface: lower
+        # explicitly; the split engine takes the ServeRequest itself
+        eng.submit(to_internal(r) if isinstance(eng, ReferenceEngine)
+                   else r)
     t0 = time.perf_counter()
     done = eng.run()
     wall = time.perf_counter() - t0

@@ -14,6 +14,7 @@ contract).  Sections (select a subset with ``--only``):
   router   — ReplicaRouter over N engines vs N=1             (bench_serve_router)
   prefix   — radix prefix cache: multi-turn chat, warm/cold  (bench_prefix_cache)
   quant    — int8 KV pools: accuracy envelope + bytes halved (bench_kv_quant)
+  slo      — open-loop Poisson vs AOT-bucketed router        (bench_serve_slo)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
@@ -54,10 +55,16 @@ Six sections double as CI gates when explicitly selected:
     fp-pool engine at or above the fixed threshold, shrink bytes-per-page
     and bytes_spilled by exactly the pool itemsize ratio (>= 2x) over the
     SAME spilled pages, and still gather strictly fewer continuation-
-    prefill bytes than the int8 ref baseline.
+    prefill bytes than the int8 ref baseline;
+  * ``--only slo`` exits nonzero unless the open-loop Poisson runs (each
+    QPS level on a fresh AOT-bucketed engine behind an N=1 router) stay
+    per-request token-identical to a closed-loop unbucketed reference,
+    the streamed events match the drained results, and after warmup
+    ``aot_misses == 0`` with ``aot_hits > 0``.  TTFT/TPOT p50/p99 and
+    queue depth are recorded, never wall-clock-gated.
 
-The serve, sharded, router, prefix and quant sections also append their
-metrics (tagged
+The serve, sharded, router, prefix, quant and slo sections also append
+their metrics (tagged
 with a ``section`` field) to ``BENCH_serve.json`` at the repo root — the
 machine-readable perf trajectory across PRs, which
 ``scripts/bench_regress.py`` gates on per section (counters only, never
@@ -280,6 +287,36 @@ def _quant(gate: bool = False):
     return csv
 
 
+def _slo(gate: bool = False):
+    from benchmarks import bench_serve_slo
+    csv, metrics = bench_serve_slo.run()
+    _record_serve_trajectory(metrics, section="slo")
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append(
+            "open-loop token streams diverged from the closed-loop "
+            "unbucketed reference (AOT padding or arrival-time scheduling "
+            "leaked into the tokens)")
+    if not metrics["streams_identical"]:
+        failures.append(
+            "streamed events disagree with the drained results — the "
+            "async detokenize pipeline dropped/reordered tokens")
+    if metrics["aot_misses"] != 0:
+        failures.append(
+            f"aot_misses = {metrics['aot_misses']} after warmup (must be "
+            "0: every serving prefill must hit a build-time-compiled "
+            "executable — a miss is a potential jit stall under load)")
+    if metrics["aot_hits"] <= 0:
+        failures.append(
+            "aot_hits == 0: the bucketed path never dispatched — the "
+            "gate is vacuous")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only slo: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -325,6 +362,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("quant",
      "Quantized int8 KV pools: accuracy envelope + bytes-per-page halving",
      _quant),
+    ("slo",
+     "Open-loop SLO: Poisson arrivals vs AOT-bucketed router (TTFT/TPOT)",
+     _slo),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -349,7 +389,7 @@ def main(argv: list[str] | None = None) -> None:
             continue
         section(title)
         if key in ("prefill", "serve", "sharded", "router", "prefix",
-                   "quant"):
+                   "quant", "slo"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)

@@ -33,7 +33,8 @@ REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
 #: per-section (name, extractor, direction): "le" = new must stay <=
 #: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
-#: ``serve``, ``sharded``, ``router``, ``prefix`` and ``quant`` gates
+#: ``serve``, ``sharded``, ``router``, ``prefix``, ``quant`` and ``slo``
+#: gates
 #: (tagged with a "section" field; untagged legacy records read as ``serve`` for
 #: backward compatibility, though the checked-in trajectory is fully
 #: tagged — ``tests/test_benchmarks.py`` asserts that), so each section
@@ -76,6 +77,18 @@ CHECKS_BY_SECTION = {
          lambda m: float(m["prefix_hits"]), "ge"),
         ("prefill_tokens_skipped",
          lambda m: float(m["prefill_tokens_skipped"]), "ge"),
+    ),
+    # the open-loop SLO gate: aot_misses must stay at 0 (any miss is a
+    # potential first-hit compile stall on the serving path) and the
+    # bucket padding per prefill token must never creep up (buckets
+    # silently coarsening).  TTFT/TPOT are recorded in the same records
+    # but NEVER gated — wall-clock on shared runners is ~5x noisy; the
+    # counters are exact dispatch-event counts
+    "slo": (
+        ("aot_misses",
+         lambda m: float(m["aot_misses"]), "le"),
+        ("bucket_pad_per_prefill_token",
+         lambda m: float(m["bucket_pad_per_prefill_token"]), "le"),
     ),
     # the quantized-KV gate: bytes-per-page must never creep back up
     # (quantization silently widening), the greedy top-1 accuracy

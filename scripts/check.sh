@@ -16,7 +16,10 @@
 #      workload, streams token-identical to cold admission) + quant gate
 #      (`--only quant`: int8 pools keep the kernels live with the
 #      accuracy envelope held and bytes-per-page/spill bytes shrunk by
-#      the itemsize ratio) + the counter-based regression gate
+#      the itemsize ratio) + slo gate (`--only slo`: open-loop Poisson
+#      arrivals vs the AOT-bucketed router — token identity vs the
+#      closed-loop unbucketed reference, aot_misses == 0 after warmup)
+#      + the counter-based regression gate
 #      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
 #   5. IF >1 host device is advertised: the sharded-kernel differential
 #      subset first (fail fast if a shard_map wrapper diverges from the
@@ -68,8 +71,11 @@ python -m pytest -q -m "prefix and not sharded" "$@"
 echo "== quant suite (int8 KV differentials + spill bit-identity)"
 python -m pytest -q -m "quant and not sharded and not kernels" "$@"
 
+echo "== slo suite (AOT buckets, async detokenize, open-loop determinism)"
+python -m pytest -q -m "slo and not sharded" "$@"
+
 echo "== fast tests"
-python -m pytest -q -m "fast and not kernels and not sharded and not router and not prefix and not quant" "$@"
+python -m pytest -q -m "fast and not kernels and not sharded and not router and not prefix and not quant and not slo" "$@"
 
 echo "== serve gate (fused decode horizon must amortize host syncs)"
 python -m benchmarks.run --only serve
@@ -82,6 +88,9 @@ python -m benchmarks.run --only prefix
 
 echo "== quant gate (int8 pools: kernels live, accuracy envelope, bytes halved)"
 python -m benchmarks.run --only quant
+
+echo "== slo gate (open-loop Poisson: token identity, aot_misses == 0)"
+python -m benchmarks.run --only slo
 
 echo "== serve counter regression gate (BENCH_serve.json trajectory)"
 python scripts/bench_regress.py

@@ -28,6 +28,19 @@ in the ``section:"quant"`` trajectory (``top1_agreement``: positionwise
 greedy-token agreement vs the fp-pool engine; ``logit_max_abs_err``: a
 model-level decode-logit probe), where ``scripts/bench_regress.py`` gates
 it (agreement "ge", bytes-per-page "le" — never tok/s).
+
+AOT-bucketed serving (``ServeConfig.aot_buckets``) adds the compile-stall
+observability the open-loop SLO gate runs on: ``aot_hits`` (prefill /
+continuation batches dispatched through an executable compiled at engine
+build), ``aot_misses`` (batches that fell back to the shape-keyed jit —
+the gate requires 0 after warmup, because each miss is a potential
+first-hit compile stall on the serving path), and ``bucket_pad_tokens``
+(pure padding overhead of rounding batches up to the compiled shape —
+gated per prefill token, "le").  The async stream pipeline adds
+``detok_backlog_peak``: the deepest the background detokenize queue ever
+got — a PEAK, not a monotonic count, written directly by the
+detokenizer — the observable for "host post-processing is falling behind
+the device".
 """
 
 from __future__ import annotations

@@ -4,6 +4,11 @@ Spins up the split serving engine (host Scheduler = policy plane, device
 Executor = data plane; see ``repro/serve/engine.py``) on a reduced config
 and reports the paper-aligned statistics: translation bursts, page faults,
 context-switch bytes/cycles, page-table delta uploads, tokens/s.
+
+All serving flags come from ``ServeConfig.add_args`` — the single flag
+surface shared with the benchmarks — and the config header is
+``ServeConfig.describe()``.  This driver adds only workload shape
+(--requests/--prompt-len/...) and fleet shape (--replicas/--route-policy).
 """
 
 import argparse
@@ -14,7 +19,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, ServeConfig, ServeRequest
 
 
 def main() -> None:
@@ -23,18 +28,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--page-size", type=int, default=8)
-    ap.add_argument("--num-pages", type=int, default=64,
-                    help="small pools force preemption (context switches)")
-    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="preload a shared prefix; requests fork from it "
                          "(continuation prefill through the Executor)")
-    ap.add_argument("--max-horizon", type=int, default=8,
-                    help="fused decode horizon cap: up to K chained decode "
-                         "steps per dispatch with on-device sampling "
-                         "(1 disables fusion)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="model replicas behind the ReplicaRouter: N "
                          "independent Scheduler+Executor pairs (each with "
@@ -45,31 +42,11 @@ def main() -> None:
                     help="replica placement policy (fork affinity is "
                          "always enforced on top: COW forks stay on a "
                          "prefix-holding replica)")
-    ap.add_argument("--serve-mesh", default="off",
-                    help="shard the executor's KV pools over a ('kv','hd') "
-                         "serve mesh: 'auto' factors all visible devices "
-                         "(force some on CPU with XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=8), an "
-                         "integer caps the device count, 'off' (default) "
-                         "keeps single-device placement; Pallas kernels "
-                         "stay LIVE on the mesh via shard_map")
-    ap.add_argument("--no-prefix-cache", action="store_true",
-                    help="disable the radix prefix cache: admissions whose "
-                         "prompts share leading whole pages with a resident "
-                         "run no longer COW-map them automatically (explicit "
-                         "--prefix-len forking still works)")
-    ap.add_argument("--no-kernels", action="store_true",
-                    help="explicit escape hatch: dispatch every compute "
-                         "step through the jnp reference twin instead of "
-                         "the Pallas kernels (counted as "
-                         "ref_path_dispatches in the final stats)")
-    ap.add_argument("--kv-dtype", choices=("native", "int8"),
-                    default="native",
-                    help="KV pool storage dtype: int8 stores quantized "
-                         "pages (doubling+ effective pool reach, shrinking "
-                         "spill bytes by the itemsize ratio); the paged-"
-                         "attention kernels dequantize in VMEM, so the "
-                         "kernel path stays live (quant_dispatches)")
+    ap.add_argument("--stream", action="store_true",
+                    help="attach a per-request stream callback: tokens are "
+                         "detokenized and delivered by the background "
+                         "AsyncDetokenizer thread in commit order")
+    ServeConfig.add_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -83,26 +60,16 @@ def main() -> None:
     # rebuilding a kernel-free model, so the hatch is visible in counters
     model = build_model(cfg, remat=False, use_kernels=True)
     params = model.init(jax.random.PRNGKey(args.seed))
-    mesh = None
-    if args.serve_mesh != "off":
-        from repro.launch.mesh import make_host_serve_mesh
-        n_dev = None if args.serve_mesh == "auto" else int(args.serve_mesh)
-        mesh = make_host_serve_mesh(cfg.num_kv_heads, cfg.head_dim, n_dev)
+    serve_cfg = ServeConfig.from_args(args, max_pages_per_seq=max(
+        4, (args.prefix_len + args.prompt_len + args.max_new_tokens)
+        // args.page_size + 2
+    ))
+    print(serve_cfg.describe())
+    mesh = serve_cfg.build_mesh(cfg)
+    if mesh is not None:
         print(f"serve mesh: {dict(mesh.shape)} over {mesh.size} of "
               f"{jax.device_count()} visible devices (KV pools sharded, "
               "page table replicated)")
-    serve_cfg = ServeConfig(
-        page_size=args.page_size, num_pages=args.num_pages,
-        max_pages_per_seq=max(
-            4, (args.prefix_len + args.prompt_len + args.max_new_tokens)
-            // args.page_size + 2
-        ),
-        max_batch=args.max_batch,
-        max_horizon=args.max_horizon,
-        use_ref_path=args.no_kernels,
-        prefix_cache=not args.no_prefix_cache,
-        kv_dtype=args.kv_dtype,
-    )
     engines = [Engine(model, params, serve_cfg, mesh=mesh)
                for _ in range(max(1, args.replicas))]
     eng = engines[0]
@@ -124,28 +91,42 @@ def main() -> None:
         for e in engines:     # every replica can parent COW forks
             e.preload_prefix(prefix)
     front = router if router is not None else eng
-    for i in range(args.requests):
+    streamed: list = []
+    callback = streamed.append if args.stream else None
+    for _ in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
         shape = (plen, cfg.num_codebooks) if (
             cfg.family == "audio" and cfg.num_codebooks > 1
         ) else (plen,)
-        front.submit(Request(
-            req_id=i,
+        front.submit(ServeRequest(
             prompt=rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32),
             max_new_tokens=args.max_new_tokens,
             share_prefix=share,
+            stream_callback=callback,
         ))
     t0 = time.perf_counter()
-    done = front.run()
+    results = front.drain()
     dt = time.perf_counter() - t0
     stats = eng.stats()
-    total_tokens = sum(len(r.output) for r in done.values())
-    n_done = sum(1 for r in done.values() if r.status == "done")
-    n_failed = sum(1 for r in done.values() if r.status == "failed")
+    total_tokens = sum(len(r.tokens) for r in results.values())
+    n_done = sum(1 for r in results.values() if r.status == "done")
+    n_failed = sum(1 for r in results.values() if r.status == "failed")
     print(f"completed {n_done}/{args.requests} requests "
           f"({n_failed} failed reach checks), "
           f"{total_tokens} tokens in {dt:.1f}s "
           f"({total_tokens / dt:.1f} tok/s on CPU interpret)")
+    finished = [r for r in results.values() if r.status == "done"]
+    if finished:
+        ttfts = sorted(r.ttft for r in finished)
+        tpots = sorted(r.tpot for r in finished)
+        mid = len(finished) // 2
+        print(f"  latency: TTFT p50 {ttfts[mid] * 1e3:.1f} ms / "
+              f"max {ttfts[-1] * 1e3:.1f} ms, TPOT p50 "
+              f"{tpots[mid] * 1e3:.1f} ms (commit-point stamps), peak "
+              f"{max(r.pages_peak for r in finished)} pages/request")
+    if args.stream:
+        print(f"  streamed {len(streamed)} events via AsyncDetokenizer "
+              f"(backlog peak {eng.counters.get('detok_backlog_peak')})")
     if router is not None:
         r = router.counters
         print(f"router: {r.get('placements')} placements "
@@ -168,6 +149,10 @@ def main() -> None:
           f"{c.get('ref_path_dispatches')} ref-path compute steps, "
           f"{c.get('prefill_bytes_gathered')} B continuation-prefill KV "
           f"gathered")
+    if serve_cfg.aot_buckets:
+        print(f"  aot prefill: {c.get('aot_hits')} hits / "
+              f"{c.get('aot_misses')} misses, "
+              f"{c.get('bucket_pad_tokens')} pad tokens")
     kp, vp = eng.kv.k_pools, eng.kv.v_pools
     per_page = (int(kp.nbytes) + int(vp.nbytes)) // kp.shape[1]
     print(f"  kv pools: dtype={kp.dtype} ({args.kv_dtype}), "
@@ -183,6 +168,8 @@ def main() -> None:
           f"{c.get('prefill_tokens_skipped')} prefill tokens skipped, "
           f"{c.get('shared_restores')} shared restores")
     print("pool:", stats["pool"])
+    for e in engines:
+        e.close()
 
 
 if __name__ == "__main__":

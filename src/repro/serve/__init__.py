@@ -26,9 +26,37 @@ Split per the AraOS architecture, one layer per plane:
   prefill only the divergent chunk; the router generalizes fork affinity
   into an additive longest-matching-prefix score when ranking replicas.
 
+  **The public client API** (:mod:`repro.serve.api`) is the SUPPORTED
+  entrypoint: build a validated :class:`ServeConfig` (one flag surface —
+  ``ServeConfig.add_args``/``from_args``/``describe``), construct an
+  :class:`Engine` (or a :class:`ReplicaRouter` over N of them), then
+  ``submit()`` typed :class:`ServeRequest` records and ``drain()`` typed
+  :class:`ServeResult` records — tokens, terminal status, per-request
+  TTFT/TPOT timestamps captured at the scheduler's host-visible commit
+  points, peak page footprint.  Per-token streaming rides an optional
+  ``stream_callback``, invoked in global commit order by the
+  :class:`AsyncDetokenizer` background thread (:mod:`repro.serve.
+  detokenize`) so host post-processing overlaps device work; callback
+  exceptions surface on ``drain()``.  The internal scheduler-plane
+  :class:`Request` remains public for fake-plane harnesses that drive the
+  Scheduler directly, but submitting it to an Engine/Router is deprecated
+  (one-PR shim).  With ``ServeConfig.aot_buckets`` the Executor
+  pre-compiles bucketed prefill/continuation executables at build time so
+  no request pays a first-hit jit stall (``aot_hits``/``aot_misses``/
+  ``bucket_pad_tokens``; the open-loop SLO gate in
+  ``benchmarks/bench_serve_slo.py`` holds ``aot_misses == 0``).
+
 :class:`ReferenceEngine` is the frozen pre-split seed implementation kept
 for equivalence testing and before/after benchmarks.
 """
+from repro.serve.api import (
+    RequestTiming,
+    SamplingParams,
+    ServeRequest,
+    ServeResult,
+    StreamEvent,
+)
+from repro.serve.detokenize import AsyncDetokenizer
 from repro.serve.engine import Engine
 from repro.serve.executor import Executor
 from repro.serve.prefix_cache import PrefixCache
@@ -46,6 +74,7 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
+    "AsyncDetokenizer",
     "DataPlane",
     "DecodePlan",
     "Engine",
@@ -57,7 +86,12 @@ __all__ = [
     "ReplicaRouter",
     "ReplicaState",
     "Request",
+    "RequestTiming",
     "RestoreFailure",
+    "SamplingParams",
     "Scheduler",
     "ServeConfig",
+    "ServeRequest",
+    "ServeResult",
+    "StreamEvent",
 ]

@@ -79,32 +79,59 @@ is call-for-call this engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import warnings
+from typing import Any, Callable
 
 import numpy as np
 
 from repro.core import CostModel, PerfCounters, VirtualMemory, VMemConfig
 from repro.models.transformer import TransformerLM
+from repro.serve.api import ServeRequest, ServeResult, to_internal
+from repro.serve.detokenize import AsyncDetokenizer
 from repro.serve.executor import Executor
 from repro.serve.scheduler import Request, Scheduler, ServeConfig
 
-__all__ = ["Engine", "Request", "ServeConfig"]
+__all__ = ["Engine", "Request", "ServeConfig", "ServeRequest", "ServeResult"]
+
+
+def _coerce(req, next_id: Callable[[], int], cfg: ServeConfig) -> Request:
+    """Lower a client submission to the scheduler-plane :class:`Request`.
+
+    :class:`~repro.serve.api.ServeRequest` is the supported surface;
+    passing an internal :class:`Request` directly still works for one PR
+    behind a :class:`DeprecationWarning` (the scheduler-plane type remains
+    public for fake-plane harnesses, which drive the Scheduler itself)."""
+    if isinstance(req, ServeRequest):
+        rid = req.req_id if req.req_id is not None else next_id()
+        return to_internal(req, req_id=rid, cfg=cfg)
+    warnings.warn(
+        "submitting repro.serve.scheduler.Request to Engine/ReplicaRouter "
+        "is deprecated — build a repro.serve.api.ServeRequest instead",
+        DeprecationWarning, stacklevel=3,
+    )
+    return req
 
 
 class Engine:
     """Continuous batching over a paged-KV transformer (Scheduler+Executor)."""
 
     def __init__(self, model: TransformerLM, params: Any, cfg: ServeConfig,
-                 cost: CostModel | None = None, mesh=None):
+                 cost: CostModel | None = None, mesh=None,
+                 detokenize: Callable[[Any], str] | None = None):
         """``mesh``: optional ('kv', 'hd') serve mesh
-        (:func:`repro.launch.mesh.make_host_serve_mesh`).  Only the
-        Executor's device state shards over it; the Scheduler is pure host
-        policy and needs no changes — that was the point of the split."""
+        (:func:`repro.launch.mesh.make_host_serve_mesh`); when omitted it
+        is resolved from ``cfg.serve_mesh`` (:meth:`ServeConfig.build_mesh`).
+        Only the Executor's device state shards over it; the Scheduler is
+        pure host policy and needs no changes — that was the point of the
+        split.  ``detokenize``: token->text hook for the async stream
+        thread (defaults to the id-rendering placeholder)."""
         self.model = model
         self.params = params
         self.cfg = cfg
         self.cost = cost or CostModel()
         self.counters = PerfCounters()
+        if mesh is None:
+            mesh = cfg.build_mesh(model.cfg)
         # the device pool has num_pages frames; the allocator sees one less
         # (last frame = scratch for masked writes)
         self.vmem = VirtualMemory(VMemConfig(
@@ -117,6 +144,11 @@ class Engine:
         self.executor = Executor(model, params, cfg, self.vmem, self.cost,
                                  self.counters, mesh=mesh)
         self.scheduler.attach_plane(self.executor)
+        #: async detokenize/stream thread (lazy: requests without a
+        #: stream_callback never spawn it)
+        self.detok = AsyncDetokenizer(detokenize, counters=self.counters)
+        self.scheduler.attach_stream(self.detok)
+        self._next_req_id = 0
 
     # ------------------------------------------------------------------
     # compat surface (seed engine attribute layout)
@@ -175,14 +207,40 @@ class Engine:
             self.scheduler.PREFIX_ID, np.asarray(prefix_tokens, np.int32)
         )
 
-    def submit(self, req: Request) -> None:
-        self.scheduler.submit(req)
+    def _alloc_req_id(self) -> int:
+        rid = self._next_req_id
+        self._next_req_id += 1
+        return rid
+
+    def submit(self, req: ServeRequest | Request) -> int:
+        """Enqueue a :class:`~repro.serve.api.ServeRequest` (the supported
+        client type; an internal ``Request`` is accepted for one PR behind
+        a DeprecationWarning).  Returns the request id."""
+        internal = _coerce(req, self._alloc_req_id, self.cfg)
+        self._next_req_id = max(self._next_req_id, internal.req_id + 1)
+        self.scheduler.submit(internal)
+        return internal.req_id
 
     def run(self, max_steps: int = 10_000) -> dict[int, Request]:
         """Drive until all submitted requests complete."""
         while self.scheduler.has_work and self.scheduler.step_i < max_steps:
             self.step()
         return self.scheduler.done
+
+    def drain(self, max_steps: int = 10_000) -> dict[int, ServeResult]:
+        """Drive to completion, flush the async stream thread (re-raising
+        any callback exception), and return typed
+        :class:`~repro.serve.api.ServeResult` records by request id."""
+        self.run(max_steps)
+        self.detok.drain()
+        return {
+            rid: ServeResult.from_request(r)
+            for rid, r in self.scheduler.done.items()
+        }
+
+    def close(self) -> None:
+        """Retire the stream thread deterministically (idempotent)."""
+        self.detok.close()
 
     def step(self) -> None:
         # the canonical serving step lives on the Scheduler

@@ -163,6 +163,27 @@ _decode_multi_step = jax.jit(_decode_multi_impl, static_argnums=(0, 10, 11),
 _copy_pages = jax.jit(_copy_pages_impl, donate_argnums=(0, 1))
 
 
+def select_bucket(n: int, buckets: tuple[int, ...] | None) -> int | None:
+    """Smallest AOT bucket that can hold an ``n``-token (burst-aligned)
+    prompt batch, or ``None`` on a miss — the caller then falls back to
+    the shape-keyed jit path.  ``buckets`` is the sorted tuple
+    ``ServeConfig.aot_buckets`` normalized to."""
+    if not buckets:
+        return None
+    for b in buckets:
+        if b >= n:
+            return b
+    return None
+
+
+#: AOT-compiled prefill/continuation executables, keyed by
+#: (step-model twin, mesh, kind, bucket, batch/pool geometry).  Module
+#: level — mirroring the lru_cached model twins above — so every engine
+#: over the same (model twin, mesh, geometry) binds the SAME compiled
+#: executable instead of re-lowering at each build.
+_AOT_CACHE: dict[tuple, Any] = {}
+
+
 @functools.lru_cache(maxsize=None)
 def _ref_path_model(model: TransformerLM) -> TransformerLM:
     """Explicit jnp escape hatch (``ServeConfig.use_ref_path``).
@@ -371,6 +392,89 @@ class Executor:
                 "decode": functools.partial(_decode_step, self._step_model),
                 "copy_pages": _copy_pages,
             }
+        #: AOT-bucketed prefill/continuation executables for THIS engine,
+        #: (kind, bucket) -> compiled; populated at build so no request
+        #: ever pays a first-hit jit stall (``ServeConfig.aot_buckets``)
+        self._aot: dict[tuple[str, int], Any] = {}
+        if getattr(cfg, "aot_buckets", None):
+            self._compile_aot()
+
+    # ------------------------------------------------------------------
+    # AOT-bucketed prefill (ServeConfig.aot_buckets)
+    # ------------------------------------------------------------------
+
+    def _aot_key(self, kind: str, bucket: int) -> tuple:
+        """Module-cache key: everything the compiled executable's shapes,
+        dtypes and shardings derive from.  The kv-dtype / ref-path / mesh
+        twins are all folded into ``self._step_model`` + ``self.mesh``, so
+        distinct twins get distinct executables and identical twins share."""
+        return (self._step_model, self.mesh, kind, bucket,
+                self.cfg.max_batch, self.cfg.num_pages,
+                self.cfg.page_size, self.cfg.max_pages_per_seq)
+
+    def _aot_operands(self, kind: str, bucket: int) -> tuple:
+        """``ShapeDtypeStruct`` operands of one bucketed dispatch: full
+        ``max_batch`` rows, ``bucket``-length prompts, the executor's live
+        pool/page-table geometry (quantized pools keep their narrow dtype
+        because the SDS is read off the allocated pools)."""
+        sds = jax.ShapeDtypeStruct
+        b = self.cfg.max_batch
+        p_sds = jax.tree_util.tree_map(
+            lambda a: sds(jnp.shape(a), a.dtype), self.params
+        )
+        tok = sds((b, bucket), jnp.int32)
+        lens = sds((b,), jnp.int32)
+        k = sds(self.kv.k_pools.shape, self.kv.k_pools.dtype)
+        v = sds(self.kv.v_pools.shape, self.kv.v_pools.dtype)
+        pt = sds((b, self.cfg.max_pages_per_seq), jnp.int32)
+        if kind == "continue":
+            starts = sds((b,), jnp.int32)
+            return (p_sds, tok, starts, lens, k, v, pt)
+        return (p_sds, tok, lens, k, v, pt)
+
+    def _compile_aot(self) -> None:
+        """Pre-lower and ``aot_compile`` every (kind, bucket) executable
+        at engine build.  Single-device lowering goes through the module
+        jits (the model is a static argument, baked in at lower time);
+        mesh lowering goes through the per-(model, mesh) sharded steps so
+        the executables carry the declared in/out shardings."""
+        for kind in ("prefill", "continue"):
+            for bucket in self.cfg.aot_buckets:
+                key = self._aot_key(kind, bucket)
+                exe = _AOT_CACHE.get(key)
+                if exe is None:
+                    ops = self._aot_operands(kind, bucket)
+                    if self.mesh is not None:
+                        exe = self._steps[kind].lower(*ops).compile()
+                    elif kind == "prefill":
+                        exe = _prefill_step.lower(
+                            self._step_model, *ops).compile()
+                    else:
+                        exe = _continue_step.lower(
+                            self._step_model, *ops).compile()
+                    _AOT_CACHE[key] = exe
+                self._aot[(kind, bucket)] = exe
+
+    def _select_aot(self, kind: str, reqs: list[Request]):
+        """The AOT executable for this batch — ``(compiled, bucket)``, or
+        ``(None, None)`` to fall back to the shape-keyed jit.  Hits and
+        misses are counted only when bucketing is configured; a miss is a
+        batch whose burst-aligned width exceeds every bucket (or a non-1D
+        prompt modality the buckets were not compiled for)."""
+        if not self._aot:
+            return None, None
+        page = self.cfg.page_size
+        smax = max(len(r.prompt) for r in reqs)
+        smax = -(-smax // page) * page
+        bucket = None
+        if not reqs[0].prompt.shape[1:]:     # 1-D token prompts only
+            bucket = select_bucket(smax, self.cfg.aot_buckets)
+        exe = self._aot.get((kind, bucket)) if bucket is not None else None
+        if exe is None:
+            self.counters.inc("aot_misses")
+            return None, None
+        self.counters.inc("aot_hits")
+        return exe, bucket
 
     # ------------------------------------------------------------------
     # sharding invariants (mesh mode)
@@ -498,29 +602,55 @@ class Executor:
         self._count_dispatch()
         self.counters.inc("prefix_tokens", n)
 
-    def _pad_prompt_batch(self, reqs: list[Request]):
+    def _pad_prompt_batch(self, reqs: list[Request],
+                          bucket: int | None = None):
         """Burst-aligned ``[B, smax]`` prompt matrix + true lengths + the
         batch's page-table rows — shared by plain and forked admission so
-        padding/slot-lookup policy cannot desynchronize between them."""
+        padding/slot-lookup policy cannot desynchronize between them.
+
+        With ``bucket`` (an AOT dispatch) the batch is padded to the
+        compiled shape — ``max_batch`` rows of ``bucket`` tokens.  The
+        padding is numerically inert: pad rows carry ``lens=0`` and
+        all-INVALID_PAGE table rows (writes route to the scratch frame),
+        pad columns sit beyond every real row's length so causal masking
+        excludes them — real-row outputs are bit-identical to the
+        unbucketed dispatch.  The pure overhead (padded cells minus what
+        the shape-keyed dispatch would have carried) is counted as
+        ``bucket_pad_tokens``."""
         page = self.cfg.page_size
         smax = max(len(r.prompt) for r in reqs)
         smax = -(-smax // page) * page            # burst-align (jit reuse)
-        tok_shape = (len(reqs), smax) + reqs[0].prompt.shape[1:]
+        nrows = len(reqs)
+        rows = nrows
+        if bucket is not None:
+            self.counters.inc(
+                "bucket_pad_tokens",
+                self.cfg.max_batch * bucket - nrows * smax,
+            )
+            smax = bucket
+            rows = self.cfg.max_batch
+        tok_shape = (rows, smax) + reqs[0].prompt.shape[1:]
         tokens = np.zeros(tok_shape, np.int32)
         for i, r in enumerate(reqs):
             tokens[i, : len(r.prompt)] = r.prompt
-        lens = np.array([len(r.prompt) for r in reqs], np.int32)
+        lens = np.zeros((rows,), np.int32)
+        lens[:nrows] = [len(r.prompt) for r in reqs]
         slots = [self.vmem.seq(r.req_id).slot for r in reqs]
         pt_rows = jnp.take(self._ptab, jnp.asarray(slots), axis=0)
+        if rows > nrows:
+            pt_rows = jnp.pad(pt_rows, ((0, rows - nrows), (0, 0)),
+                              constant_values=INVALID_PAGE)
         return tokens, lens, pt_rows
 
     def prefill(self, reqs: list[Request]) -> list[np.ndarray]:
         """Batched prefill of freshly admitted requests; returns the first
         sampled token per request (request order)."""
         self.sync_page_table()
-        tokens, lens, pt_rows = self._pad_prompt_batch(reqs)
+        exe, bucket = self._select_aot("prefill", reqs)
+        tokens, lens, pt_rows = self._pad_prompt_batch(reqs, bucket=bucket)
+        fn = exe if exe is not None else self._steps["prefill"]
         with self.counters.timer("prefill"):
-            logits, k, v = self._steps["prefill"](
+            logits, k, v = fn(
                 self.params, jnp.asarray(tokens),
                 jnp.asarray(lens), self.kv.k_pools, self.kv.v_pools, pt_rows,
             )
@@ -611,11 +741,15 @@ class Executor:
                 jnp.asarray([dst for _, dst in copies]),
             )
             self.kv = self.kv._replace(k_pools=k, v_pools=v)
-        chunks, lens, pt_rows = self._pad_prompt_batch(reqs)
+        exe, bucket = self._select_aot("continue", reqs)
+        chunks, lens, pt_rows = self._pad_prompt_batch(reqs, bucket=bucket)
+        starts = np.zeros((chunks.shape[0],), np.int32)
+        starts[: len(reqs)] = start_lens
+        fn = exe if exe is not None else self._steps["continue"]
         with self.counters.timer("prefill"):
-            logits, k, v = self._steps["continue"](
+            logits, k, v = fn(
                 self.params, jnp.asarray(chunks),
-                jnp.asarray(start_lens, jnp.int32),
+                jnp.asarray(starts),
                 jnp.asarray(lens),
                 self.kv.k_pools, self.kv.v_pools, pt_rows,
             )

@@ -59,10 +59,12 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from collections import deque
 from typing import Any
 
 from repro.core import PerfCounters
+from repro.serve.api import ServeRequest, ServeResult
 from repro.serve.scheduler import DataPlane, Request, Scheduler
 
 
@@ -144,6 +146,7 @@ class ReplicaRouter:
         self.queue: deque[Request] = deque()   # global admission queue
         self.step_i = 0                        # router engine-steps
         self._rr_next = 0
+        self._next_req_id = 0
 
     # ------------------------------------------------------------------
     # queue API
@@ -164,10 +167,29 @@ class ReplicaRouter:
             merged.update(rep.scheduler.done)
         return merged
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: ServeRequest | Request) -> int:
+        """Enqueue a :class:`~repro.serve.api.ServeRequest` (the supported
+        client type; internal ``Request`` accepted for one PR behind a
+        DeprecationWarning).  Returns the request id."""
+        from repro.serve.engine import _coerce
+        internal = _coerce(
+            req, self._alloc_req_id, self.replicas[0].scheduler.cfg
+        )
+        self._next_req_id = max(self._next_req_id, internal.req_id + 1)
+        # TTFT clock starts at ROUTER entry: global-queue wait (backlog
+        # bound) must show up in the SLO numbers, so the stamp cannot wait
+        # for replica placement (Scheduler.submit only stamps if unset)
+        if internal.t_enqueue == 0.0:
+            internal.t_enqueue = time.perf_counter()
         self.counters.inc("submitted")
-        self.queue.append(req)
+        self.queue.append(internal)
         self._place_pending()
+        return internal.req_id
+
+    def _alloc_req_id(self) -> int:
+        rid = self._next_req_id
+        self._next_req_id += 1
+        return rid
 
     # ------------------------------------------------------------------
     # placement
@@ -298,6 +320,20 @@ class ReplicaRouter:
         while self.has_work and self._clock() < max_steps:
             self.step()
         return self.done
+
+    def drain(self, max_steps: int = 10_000) -> dict[int, ServeResult]:
+        """Drive to completion, flush every replica's async stream sink
+        (re-raising the first callback exception), and return typed
+        :class:`~repro.serve.api.ServeResult` records by request id."""
+        self.run(max_steps)
+        for rep in self.replicas:
+            stream = rep.scheduler.stream
+            if stream is not None:
+                stream.drain()
+        return {
+            rid: ServeResult.from_request(r)
+            for rid, r in self.done.items()
+        }
 
     def _clock(self) -> int:
         active = [rep.scheduler.step_i for rep in self.replicas

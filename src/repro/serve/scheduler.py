@@ -38,8 +38,9 @@ frames.  Counters: ``prefix_hits``, ``pages_reused``,
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Protocol
+from typing import Any, Callable, Protocol
 
 import numpy as np
 
@@ -58,6 +59,19 @@ class Request:
     share_prefix: bool = False      # fork from the engine's resident prefix
 
     prefix_len: int = 0             # set by the scheduler on forked admission
+
+    #: per-token stream sink (set from ``ServeRequest.stream_callback``);
+    #: invoked by the async detokenize thread, never by the scheduler
+    stream_callback: Callable | None = None
+    #: SLO timestamps (``time.perf_counter``), captured by the scheduler
+    #: at host-visible commit points — submit / first committed token /
+    #: every committed token — NEVER at detokenize, so async streaming
+    #: cannot skew TTFT/TPOT (see repro.serve.api.RequestTiming)
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_last_token: float = 0.0
+    #: peak mapped-page footprint over the request's lifetime
+    pages_peak: int = 0
 
     @property
     def total_len(self) -> int:
@@ -105,6 +119,178 @@ class ServeConfig:
     #: the token prefix); disable for a cold-admission baseline
     #: (``--no-prefix-cache`` in launch.serve, the bench reference).
     prefix_cache: bool = True
+    #: AOT-bucketed prefill: prompt batches are padded up to the smallest
+    #: of these lengths and dispatched through executables pre-lowered and
+    #: compiled at engine build (``aot_compile`` against
+    #: ``ShapeDtypeStruct``s), so no request pays a first-hit jit stall.
+    #: Buckets must be positive ``page_size`` multiples within the
+    #: page-table reach; ``None`` (default) keeps the plain shape-keyed
+    #: jit path.  Padding is numerically inert — pad rows carry lens=0 and
+    #: INVALID_PAGE table rows (routed to the scratch/trash frame) and
+    #: causal masking keeps pad columns out of every real row — so greedy
+    #: streams are bit-identical to the unbucketed dispatch.  Counters:
+    #: ``aot_hits`` / ``aot_misses`` / ``bucket_pad_tokens``.
+    aot_buckets: tuple[int, ...] | None = None
+    #: serve-mesh request: "off" (single device), "auto" (factor all
+    #: visible devices over ('kv','hd')), or an integer device count.
+    #: Resolved to a concrete mesh by :meth:`build_mesh` — the one place
+    #: the flag is interpreted (``--serve-mesh`` in launch.serve).
+    serve_mesh: str = "off"
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages < 2:
+            raise ValueError(
+                f"num_pages must be >= 2 (one frame is reserved as the "
+                f"masked-lane scratch), got {self.num_pages}")
+        if self.max_batch < 1 or self.max_horizon < 1:
+            raise ValueError(
+                f"max_batch ({self.max_batch}) and max_horizon "
+                f"({self.max_horizon}) must be >= 1")
+        if self.kv_dtype not in ("native", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'native' or 'int8', got "
+                f"{self.kv_dtype!r} (fp8 pools are a roadmap item, not a "
+                "silent fallback)")
+        if not self.greedy and self.temperature <= 0:
+            raise ValueError(
+                f"temperature must be > 0 for stochastic sampling, got "
+                f"{self.temperature}")
+        if self.serve_mesh not in ("off", "auto"):
+            try:
+                int(self.serve_mesh)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"serve_mesh must be 'off', 'auto' or a device count, "
+                    f"got {self.serve_mesh!r}") from None
+        if self.aot_buckets is not None:
+            buckets = tuple(sorted({int(b) for b in self.aot_buckets}))
+            if not buckets:
+                object.__setattr__(self, "aot_buckets", None)
+                return
+            reach = self.max_pages_per_seq * self.page_size
+            for b in buckets:
+                if b <= 0 or b % self.page_size:
+                    raise ValueError(
+                        f"aot_buckets must be positive multiples of "
+                        f"page_size={self.page_size}, got {b}")
+                if b > reach:
+                    raise ValueError(
+                        f"aot bucket {b} exceeds the page-table reach "
+                        f"({self.max_pages_per_seq} pages x "
+                        f"{self.page_size} = {reach} tokens): no prompt "
+                        "that long can ever be admitted")
+            object.__setattr__(self, "aot_buckets", buckets)
+
+    # ------------------------------------------------------------------
+    # the ONE flag surface (launch.serve and every benchmark share it)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def add_args(ap) -> None:
+        """Register the serving flags on an ``argparse`` parser — the
+        single authoritative flag set (``from_args`` consumes it)."""
+        ap.add_argument("--page-size", type=int, default=8)
+        ap.add_argument("--num-pages", type=int, default=64,
+                        help="small pools force preemption (context "
+                             "switches)")
+        ap.add_argument("--max-batch", type=int, default=4)
+        ap.add_argument("--max-horizon", type=int, default=8,
+                        help="fused decode horizon cap: up to K chained "
+                             "decode steps per dispatch with on-device "
+                             "sampling (1 disables fusion)")
+        ap.add_argument("--serve-mesh", default="off",
+                        help="shard the executor's KV pools over a "
+                             "('kv','hd') serve mesh: 'auto' factors all "
+                             "visible devices, an integer caps the device "
+                             "count, 'off' (default) keeps single-device "
+                             "placement; Pallas kernels stay LIVE on the "
+                             "mesh via shard_map")
+        ap.add_argument("--no-prefix-cache", action="store_true",
+                        help="disable the radix prefix cache (cold-"
+                             "admission baseline)")
+        ap.add_argument("--no-kernels", action="store_true",
+                        help="explicit escape hatch: dispatch every "
+                             "compute step through the jnp reference twin "
+                             "(counted as ref_path_dispatches)")
+        ap.add_argument("--kv-dtype", choices=("native", "int8"),
+                        default="native",
+                        help="KV pool storage dtype: int8 stores "
+                             "quantized pages; the paged-attention "
+                             "kernels dequantize in VMEM "
+                             "(quant_dispatches)")
+        ap.add_argument("--aot-buckets", default="off",
+                        help="comma-separated prompt-length buckets to "
+                             "AOT-compile prefill/continuation "
+                             "executables for at engine build (e.g. "
+                             "'16,32,64'); 'off' keeps the plain jit "
+                             "path")
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "ServeConfig":
+        """Build a validated config from an ``add_args`` namespace.
+
+        This replaces the per-call-site flag re-parsing that used to live
+        in ``launch.serve`` (manual ServeConfig construction, a separate
+        mesh block, ad-hoc stats headers): one parse, one validation, one
+        ``describe()``.  ``overrides`` wins over flags (callers computing
+        ``max_pages_per_seq`` from the workload pass it here).
+        """
+        buckets: tuple[int, ...] | None = None
+        raw = getattr(args, "aot_buckets", "off")
+        if raw not in (None, "", "off"):
+            try:
+                buckets = tuple(int(b) for b in str(raw).split(","))
+            except ValueError:
+                raise ValueError(
+                    f"--aot-buckets must be a comma-separated int list or "
+                    f"'off', got {raw!r}") from None
+        fields = dict(
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            max_batch=args.max_batch,
+            max_horizon=args.max_horizon,
+            use_ref_path=args.no_kernels,
+            prefix_cache=not args.no_prefix_cache,
+            kv_dtype=args.kv_dtype,
+            serve_mesh=args.serve_mesh,
+            aot_buckets=buckets,
+        )
+        if hasattr(args, "seed"):
+            fields["seed"] = args.seed
+        fields.update(overrides)
+        return cls(**fields)
+
+    def describe(self) -> str:
+        """The shared stats header: one canonical rendering of the
+        config, printed by ``launch.serve`` and the benchmarks."""
+        compute = "jnp-ref (explicit hatch)" if self.use_ref_path \
+            else "pallas kernels"
+        buckets = ",".join(str(b) for b in self.aot_buckets) \
+            if self.aot_buckets else "off (shape-keyed jit)"
+        return (
+            f"serve config: page_size={self.page_size} "
+            f"num_pages={self.num_pages} (1 scratch) "
+            f"max_pages_per_seq={self.max_pages_per_seq} "
+            f"max_batch={self.max_batch} max_horizon={self.max_horizon}\n"
+            f"  compute: {compute}, kv_dtype={self.kv_dtype}, "
+            f"prefix_cache={'on' if self.prefix_cache else 'off'}, "
+            f"sampling={'greedy' if self.greedy else f'T={self.temperature}'}"
+            f"\n  aot prefill buckets: {buckets}\n"
+            f"  serve mesh: {self.serve_mesh}"
+        )
+
+    def build_mesh(self, model_cfg):
+        """Resolve ``serve_mesh`` to a concrete ('kv','hd') mesh (or
+        ``None``) — the one place the flag is interpreted."""
+        if self.serve_mesh in (None, "off"):
+            return None
+        from repro.launch.mesh import make_host_serve_mesh
+        n_dev = None if self.serve_mesh == "auto" else int(self.serve_mesh)
+        return make_host_serve_mesh(
+            model_cfg.num_kv_heads, model_cfg.head_dim, n_dev
+        )
 
 
 class RestoreFailure(RuntimeError):
@@ -310,9 +496,34 @@ class Scheduler:
         )
         if self.prefix_cache is not None:
             vmem.add_unmap_hook(self.prefix_cache.release)
+        #: optional stream sink (an AsyncDetokenizer): every committed
+        #: token of a stream_callback-bearing request is pushed here, AT
+        #: the commit point, AFTER the timing stamps — so delivery lag
+        #: can never skew TTFT/TPOT.
+        self.stream = None
 
     def attach_plane(self, plane: DataPlane) -> None:
         self.plane = plane
+
+    def attach_stream(self, stream) -> None:
+        """Attach the async detokenize/stream sink (push-only duck type:
+        ``stream.push(req, token, final)``)."""
+        self.stream = stream
+
+    def _emit(self, req: Request, token: Any, final: bool) -> None:
+        if self.stream is not None and req.stream_callback is not None:
+            self.stream.push(req, token, final)
+
+    def _stamp_commit(self, req: Request, now: float) -> None:
+        """Timing capture point: the host-visible commit of a sampled
+        token (finish_prefill / _flush_forked / commit_decode) — NEVER
+        the detokenize thread.  Also tracks the peak mapped footprint."""
+        if req.t_first_token == 0.0:
+            req.t_first_token = now
+        req.t_last_token = now
+        if self.vmem.has_seq(req.req_id):
+            req.pages_peak = max(req.pages_peak,
+                                 len(self.vmem.seq(req.req_id).pages))
 
     # ------------------------------------------------------------------
     # per-replica state (delegated to ReplicaState)
@@ -376,6 +587,8 @@ class Scheduler:
 
     def submit(self, req: Request) -> None:
         req.arrival = self.step_i
+        if req.t_enqueue == 0.0:      # router may have stamped queue entry
+            req.t_enqueue = time.perf_counter()
         self.queue.append(req)
         self.counters.inc("submitted")
         self.counters.snapshot("submit", req.req_id)
@@ -492,9 +705,15 @@ class Scheduler:
         surfaced through ``done`` with status ``failed`` so callers see it
         and ``run()`` terminates instead of spinning until ``max_steps``."""
         req.status = "failed"
+        req.t_last_token = time.perf_counter()
+        if req.t_first_token == 0.0:
+            req.t_first_token = req.t_last_token
         self.done[req.req_id] = req
         self.counters.inc("failed_unreachable")
         self.counters.snapshot("failed_" + reason, req.req_id)
+        # streams always terminate: a failed request still gets a final
+        # event (token=None) so a client waiting on `final` never hangs
+        self._emit(req, None, final=True)
 
     # ------------------------------------------------------------------
     # restore (swap-in)
@@ -811,6 +1030,7 @@ class Scheduler:
         firsts = self.plane.admit_forked_batch(
             reqs, [e[1] for e in pending], [e[2] for e in pending]
         )
+        now = time.perf_counter()
         for (req, start_len, _, reg), first in zip(pending, firsts):
             req.status = "running"
             req.prefix_len = start_len
@@ -819,6 +1039,8 @@ class Scheduler:
             self.slot_of[req.req_id] = self.vmem.seq(req.req_id).slot
             if reg is not None and self.prefix_cache is not None:
                 self.prefix_cache.register(req.req_id, reg)
+            self._stamp_commit(req, now)
+            self._emit(req, req.output[-1], final=False)
         self.counters.inc("fork_batches")
         pending.clear()
 
@@ -826,6 +1048,7 @@ class Scheduler:
         """Commit a plain-prefill batch: mark running, record accounting.
         The prompts enter the radix cache here — the plane call that
         committed their KV has completed."""
+        now = time.perf_counter()
         for i, r in enumerate(reqs):
             r.status = "running"
             r.output.append(np.asarray(first_tokens[i]))
@@ -833,6 +1056,8 @@ class Scheduler:
             self.slot_of[r.req_id] = self.vmem.seq(r.req_id).slot
             if self.prefix_cache is not None:
                 self.prefix_cache.register(r.req_id, r.prompt)
+            self._stamp_commit(r, now)
+            self._emit(r, r.output[-1], final=False)
         lens = [len(r.prompt) for r in reqs]
         self.counters.inc("prefill_tokens", int(sum(lens)))
         self.counters.inc("prefill_translation_bursts", int(
@@ -990,11 +1215,17 @@ class Scheduler:
                 self.begin_step()
             self.counters.inc("decode_tokens", len(self.running))
             self.counters.inc("decode_translations", len(self.running))
+            now = time.perf_counter()
             for req_id in list(self.running):
                 r = self.running[req_id]
                 slot = self.slot_of[req_id]
                 r.output.append(np.asarray(block[t][slot]))
-                if len(r.output) >= r.max_new_tokens:
+                # SLO timing capture point: the host-visible commit of
+                # this token — stamped BEFORE the async stream push, so
+                # detokenize lag cannot skew TTFT/TPOT
+                self._stamp_commit(r, now)
+                retired = len(r.output) >= r.max_new_tokens
+                if retired:
                     r.status = "done"
                     self.done[req_id] = r
                     del self.running[req_id]
@@ -1002,3 +1233,4 @@ class Scheduler:
                     self.vmem.unmap_seq(req_id)
                     self.counters.inc("completed")
                     self.counters.snapshot("done", req_id)
+                self._emit(r, r.output[-1], final=retired)

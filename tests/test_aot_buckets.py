@@ -1,0 +1,176 @@
+"""AOT-bucketed prefill (``ServeConfig.aot_buckets``): bucket selection
+boundaries, exact pad accounting, token identity vs the unbucketed
+engine, and module-cache keying across model twins.
+
+The contract (see ``repro/serve/executor.py``): every prefill /
+continuation dispatch whose burst-aligned width fits a configured bucket
+runs through an executable compiled AT ENGINE BUILD (``aot_hits``), pads
+are numerically inert (greedy streams bit-identical to the plain
+shape-keyed jit path), wider batches fall back loudly (``aot_misses``),
+and executables are shared module-wide per (model twin, mesh, kind,
+bucket, geometry) — never re-lowered per engine.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig, ServeRequest
+from repro.serve.executor import _AOT_CACHE, select_bucket
+
+pytestmark = pytest.mark.slo
+
+KEY = jax.random.PRNGKey(0)
+
+GEOM = dict(page_size=4, num_pages=64, max_pages_per_seq=16, max_batch=3)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    return cfg, model, model.init(KEY)
+
+
+def _reqs(cfg, lens, max_new=6):
+    rng = np.random.default_rng(11)
+    return [
+        ServeRequest(
+            prompt=rng.integers(0, cfg.vocab_size, size=n).astype(np.int32),
+            max_new_tokens=max_new, req_id=i,
+        )
+        for i, n in enumerate(lens)
+    ]
+
+
+def _tokens(results):
+    return {rid: [int(np.asarray(t)) for t in r.tokens]
+            for rid, r in results.items()}
+
+
+class TestSelectBucket:
+    def test_boundaries(self):
+        assert select_bucket(8, (8, 16)) == 8      # exact fit
+        assert select_bucket(9, (8, 16)) == 16     # next bucket up
+        assert select_bucket(16, (8, 16)) == 16
+        assert select_bucket(17, (8, 16)) is None  # beyond every bucket
+        assert select_bucket(1, (8, 16)) == 8
+
+    def test_no_buckets(self):
+        assert select_bucket(4, None) is None
+        assert select_bucket(4, ()) is None
+
+
+class TestAotEngine:
+    def test_token_identity_and_no_misses(self, model_and_params):
+        """Bucket padding must be invisible in the greedy streams, and
+        every dispatch must hit a build-time executable."""
+        cfg, model, params = model_and_params
+        lens = (5, 7, 4, 11, 8)                  # spans both buckets
+        plain = Engine(model, params, ServeConfig(**GEOM))
+        for r in _reqs(cfg, lens):
+            plain.submit(r)
+        want = _tokens(plain.drain())
+        assert plain.counters.get("aot_hits") == 0    # unbucketed: no counting
+        assert plain.counters.get("aot_misses") == 0
+
+        aot = Engine(model, params,
+                     ServeConfig(aot_buckets=(8, 16), **GEOM))
+        for r in _reqs(cfg, lens):
+            aot.submit(r)
+        got = _tokens(aot.drain())
+        assert got == want
+        assert aot.counters.get("aot_hits") > 0
+        assert aot.counters.get("aot_misses") == 0
+        assert aot.counters.get("bucket_pad_tokens") > 0
+
+    def test_exact_pad_accounting_single_request(self, model_and_params):
+        """One 5-token prompt under bucket 8, max_batch 3: the dispatch
+        pads 1 row of burst-aligned width 8 up to 3 rows x 8 columns —
+        exactly max_batch*bucket - nrows*aligned == 16 pad tokens."""
+        cfg, model, params = model_and_params
+        eng = Engine(model, params, ServeConfig(aot_buckets=(8,), **GEOM))
+        eng.submit(_reqs(cfg, (5,))[0])
+        eng.drain()
+        assert eng.counters.get("aot_hits") == 1
+        assert eng.counters.get("bucket_pad_tokens") == 3 * 8 - 1 * 8
+
+    def test_overlong_prompt_is_a_counted_miss(self, model_and_params):
+        """A prompt whose aligned width exceeds every bucket falls back
+        to the shape-keyed jit — counted, completed, token-identical."""
+        cfg, model, params = model_and_params
+        plain = Engine(model, params, ServeConfig(**GEOM))
+        for r in _reqs(cfg, (9,)):
+            plain.submit(r)
+        want = _tokens(plain.drain())
+
+        eng = Engine(model, params, ServeConfig(aot_buckets=(8,), **GEOM))
+        for r in _reqs(cfg, (9,)):                # aligned width 12 > 8
+            eng.submit(r)
+        got = _tokens(eng.drain())
+        assert got == want
+        assert eng.counters.get("aot_misses") == 1
+        assert eng.counters.get("aot_hits") == 0
+        assert eng.counters.get("bucket_pad_tokens") == 0
+
+    def test_continuation_prefill_rides_the_buckets(self, model_and_params):
+        """share_prefix forks prefill only the divergent chunk through
+        ``admit_forked_batch`` — that continuation dispatch must hit the
+        'continue' executable, and streams must match the unbucketed
+        forked engine."""
+        cfg, model, params = model_and_params
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+
+        def forked(serve_cfg):
+            eng = Engine(model, params, serve_cfg)
+            eng.preload_prefix(prefix)
+            for r in _reqs(cfg, (5, 6)):
+                r.share_prefix = True
+                eng.submit(r)
+            return eng
+
+        plain = forked(ServeConfig(**GEOM))
+        want = _tokens(plain.drain())
+        aot = forked(ServeConfig(aot_buckets=(8,), **GEOM))
+        got = _tokens(aot.drain())
+        assert got == want
+        assert aot.counters.get("aot_misses") == 0
+        assert aot.counters.get("aot_hits") > 0
+        assert aot.counters.get("continuation_prefill_tokens") == \
+            plain.counters.get("continuation_prefill_tokens")
+
+
+class TestModuleCacheKeying:
+    def test_same_twin_shares_new_twin_recompiles(self, model_and_params):
+        """The module cache keys on (step-model twin, mesh, kind, bucket,
+        geometry): a second identical engine adds NOTHING and binds the
+        same executables; an int8-KV engine (a different model twin with
+        different pool dtypes) adds exactly its own entries; a new bucket
+        size adds exactly one entry per kind.  A geometry no other test
+        uses (max_batch=2), so the entry-count deltas are exact
+        regardless of what ran before in this process."""
+        cfg, model, params = model_and_params
+        geom = dict(GEOM, max_batch=2)
+        a = Engine(model, params, ServeConfig(aot_buckets=(8,), **geom))
+        n0 = len(_AOT_CACHE)
+
+        b = Engine(model, params, ServeConfig(aot_buckets=(8,), **geom))
+        assert len(_AOT_CACHE) == n0              # full reuse
+        assert all(b.executor._aot[k] is a.executor._aot[k]
+                   for k in a.executor._aot)
+
+        wider = Engine(model, params,
+                       ServeConfig(aot_buckets=(8, 16), **geom))
+        assert len(_AOT_CACHE) == n0 + 2          # (prefill,16), (continue,16)
+        assert wider.executor._aot[("prefill", 8)] is \
+            a.executor._aot[("prefill", 8)]
+
+        n1 = len(_AOT_CACHE)
+        q = Engine(model, params,
+                   ServeConfig(aot_buckets=(8,), kv_dtype="int8", **geom))
+        assert len(_AOT_CACHE) == n1 + 2          # int8 twin: own executables
+        assert q.executor._aot[("prefill", 8)] is not \
+            a.executor._aot[("prefill", 8)]

@@ -35,7 +35,8 @@ except ImportError:  # deterministic fallback shim (see requirements-dev.txt)
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Engine, ReferenceEngine, Request, ServeConfig
+from repro.serve import Engine, ReferenceEngine, ServeConfig, ServeRequest
+from repro.serve.api import to_internal
 
 KEY = jax.random.PRNGKey(0)
 
@@ -52,10 +53,10 @@ def workload(cfg, lens_new_fork, seed=29, prefix_len=0):
     prefix = (rng.integers(0, cfg.vocab_size, size=prefix_len)
               .astype(np.int32) if prefix_len else None)
     reqs = [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size, size=int(l))
-                .astype(np.int32),
-                max_new_tokens=m, share_prefix=f)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size, size=int(l))
+                     .astype(np.int32),
+                     max_new_tokens=m, share_prefix=f)
         for i, (l, m, f) in enumerate(lens_new_fork)
     ]
     return prefix, reqs
@@ -66,7 +67,9 @@ def run_engine(eng_cls, model, params, serve_cfg, reqs, prefix=None):
     if prefix is not None:
         eng.preload_prefix(prefix)
     for r in reqs:
-        eng.submit(copy.deepcopy(r))
+        r = copy.deepcopy(r)
+        # the frozen seed engine predates the typed surface: lower explicitly
+        eng.submit(to_internal(r) if eng_cls is ReferenceEngine else r)
     done = eng.run()
     return eng, done
 

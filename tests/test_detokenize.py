@@ -1,0 +1,149 @@
+"""AsyncDetokenizer: ordered delivery, drain/close semantics, exception
+surfacing, backlog-peak accounting — all host-only (no device, no model).
+
+The contract under test (see ``repro/serve/detokenize.py``): ONE consumer
+thread makes the delivery order exactly the push (= global commit) order;
+``drain()`` blocks until every pushed event is delivered and re-raises
+the first callback exception; the scheduler-side ``push`` never raises
+for callback failures (they must not unwind the commit loop); requests
+without a ``stream_callback`` cost nothing (no thread).
+"""
+
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import PerfCounters
+from repro.serve.detokenize import AsyncDetokenizer, default_detokenize
+
+pytestmark = pytest.mark.slo
+
+
+def _req(req_id, cb):
+    """The duck-typed producer-side view: ``push`` reads only ``req_id``,
+    ``stream_callback`` and (optionally) ``t_last_token``."""
+    return types.SimpleNamespace(req_id=req_id, stream_callback=cb,
+                                 t_last_token=0.125)
+
+
+class TestOrdering:
+    def test_global_and_per_request_order(self):
+        got = []
+        detok = AsyncDetokenizer()
+        reqs = {i: _req(i, got.append) for i in range(3)}
+        pushed = []
+        for j in range(5):
+            for i in range(3):
+                final = j == 4
+                detok.push(reqs[i], np.int32(100 * i + j), final)
+                pushed.append((i, j))
+        detok.drain()
+        # delivery order == push order (one consumer, FIFO queue)
+        assert [(e.req_id, e.index) for e in got] == pushed
+        # per-request indexes are dense 0..n-1 and only the last is final
+        for i in range(3):
+            evs = [e for e in got if e.req_id == i]
+            assert [e.index for e in evs] == list(range(5))
+            assert [e.final for e in evs] == [False] * 4 + [True]
+        # payloads survive: token and its default detokenization
+        assert all(e.text == f"<{int(e.token)}>" for e in got)
+        assert all(e.t_commit == 0.125 for e in got)
+        detok.close()
+
+    def test_no_callback_no_thread(self):
+        detok = AsyncDetokenizer()
+        detok.push(_req(0, None), np.int32(1), False)
+        assert detok._thread is None          # never spawned
+        assert detok.backlog == 0
+        detok.drain()
+        detok.close()
+
+
+class TestDrainAndClose:
+    def test_drain_blocks_until_delivered(self):
+        delivered = []
+
+        def slow(ev):
+            time.sleep(0.01)
+            delivered.append(ev)
+
+        detok = AsyncDetokenizer()
+        r = _req(7, slow)
+        for j in range(8):
+            detok.push(r, np.int32(j), j == 7)
+        detok.drain()
+        assert len(delivered) == 8
+        detok.close()
+
+    def test_close_idempotent_and_refuses_push(self):
+        detok = AsyncDetokenizer()
+        r = _req(0, lambda ev: None)
+        detok.push(r, np.int32(1), True)
+        detok.close()
+        detok.close()                          # idempotent
+        with pytest.raises(RuntimeError):
+            detok.push(r, np.int32(2), False)
+
+
+class TestExceptions:
+    def test_callback_exception_surfaces_on_drain(self):
+        """push() never raises for callback failures; the FIRST exception
+        re-raises on drain(), and events for OTHER requests around the
+        failure are still delivered."""
+        good = []
+
+        def bad(ev):
+            raise ValueError(f"boom at {ev.index}")
+
+        detok = AsyncDetokenizer()
+        rb, rg = _req(0, bad), _req(1, good.append)
+        detok.push(rg, np.int32(10), False)
+        detok.push(rb, np.int32(20), False)    # raises in the worker
+        detok.push(rb, np.int32(21), True)     # second failure: swallowed
+        detok.push(rg, np.int32(11), True)     # still delivered
+        with pytest.raises(ValueError, match="boom at 0"):
+            detok.drain()
+        assert [int(e.token) for e in good] == [10, 11]
+        # the exception was consumed: drain is clean again
+        detok.drain()
+        detok.close()
+
+    def test_detokenizer_exception_surfaces_too(self):
+        def bad_detok(token):
+            raise TypeError("no vocab")
+
+        detok = AsyncDetokenizer(detokenize=bad_detok)
+        detok.push(_req(0, lambda ev: None), np.int32(1), True)
+        with pytest.raises(TypeError, match="no vocab"):
+            detok.close()
+
+
+class TestBacklogPeak:
+    def test_peak_recorded_not_incremented(self):
+        """detok_backlog_peak is a PEAK (max depth ever), written directly
+        — pushing while the consumer is blocked must record the depth,
+        and later shallow pushes must not lower or re-add to it."""
+        gate = threading.Event()
+        counters = PerfCounters()
+        detok = AsyncDetokenizer(counters=counters)
+        r = _req(0, lambda ev: gate.wait(timeout=10.0))
+        for j in range(6):
+            detok.push(r, np.int32(j), False)
+        peak = counters.get("detok_backlog_peak")
+        assert peak >= 5                       # consumer held on event 0
+        gate.set()
+        detok.drain()
+        detok.push(r, np.int32(6), True)       # depth 1 now: peak unchanged
+        detok.drain()
+        assert counters.get("detok_backlog_peak") == peak
+        detok.close()
+
+
+class TestDefaultDetokenize:
+    def test_shapes(self):
+        assert default_detokenize(None) == ""
+        assert default_detokenize(np.int32(42)) == "<42>"
+        assert default_detokenize(np.array([1, 2, 3])) == "<1,2,3>"

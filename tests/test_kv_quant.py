@@ -41,7 +41,7 @@ from repro.core.context_switch import ContextSwitcher
 from repro.kernels import ops
 from repro.models import build_model
 from repro.models.transformer import TransformerLM
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, ServeConfig, ServeRequest
 
 pytestmark = pytest.mark.quant
 
@@ -301,11 +301,11 @@ class TestEngineDispatch:
     def _workload(self, cfg, n=4, seed=13, max_new=8):
         rng = np.random.default_rng(seed)
         return [
-            Request(req_id=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        size=int(rng.integers(4, 12)))
-                    .astype(np.int32),
-                    max_new_tokens=max_new)
+            ServeRequest(req_id=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             size=int(rng.integers(4, 12)))
+                         .astype(np.int32),
+                         max_new_tokens=max_new)
             for i in range(n)
         ]
 

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.core import CostModel
 from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, ServeConfig, ServeRequest
 
 KEY = jax.random.PRNGKey(0)
 
@@ -22,7 +22,7 @@ def model_and_params():
 
 def make_requests(cfg, n, rng, max_new=10):
     return [
-        Request(
+        ServeRequest(
             req_id=i,
             prompt=rng.integers(
                 0, cfg.vocab_size, size=int(rng.integers(4, 12))
@@ -137,11 +137,11 @@ def test_heavy_preemption_cascade(model_and_params):
     cfg, model, params = model_and_params
     rng = np.random.default_rng(9)
     reqs = [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(5, 14))
-                                    ).astype(np.int32),
-                max_new_tokens=16)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(5, 14))
+                                         ).astype(np.int32),
+                     max_new_tokens=16)
         for i in range(8)
     ]
     tiny = Engine(model, params, ServeConfig(
@@ -177,8 +177,8 @@ def test_prefix_sharing_exact(model_and_params):
         page_size=4, num_pages=64, max_pages_per_seq=32, max_batch=4))
     shared.preload_prefix(prefix)
     for i, t in enumerate(tails):
-        shared.submit(Request(req_id=i, prompt=t, max_new_tokens=8,
-                              share_prefix=True))
+        shared.submit(ServeRequest(req_id=i, prompt=t, max_new_tokens=8,
+                                   share_prefix=True))
     done_s = shared.run()
     # whole prefix pages are multi-referenced while children run; invariants
     shared.vmem.check_invariants()
@@ -187,8 +187,9 @@ def test_prefix_sharing_exact(model_and_params):
     full = Engine(model, params, ServeConfig(
         page_size=4, num_pages=256, max_pages_per_seq=32, max_batch=4))
     for i, t in enumerate(tails):
-        full.submit(Request(req_id=i, prompt=np.concatenate([prefix, t]),
-                            max_new_tokens=8))
+        full.submit(ServeRequest(req_id=i,
+                                 prompt=np.concatenate([prefix, t]),
+                                 max_new_tokens=8))
     done_f = full.run()
     for i in range(3):
         assert [int(x) for x in done_s[i].output] == \

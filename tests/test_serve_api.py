@@ -1,0 +1,240 @@
+"""The typed client surface (``repro.serve.api``) + the single validated
+flag surface (``ServeConfig.from_args``): request/result lowering, the
+one-PR deprecation shim, and the TTFT/TPOT capture-point contract.
+
+Everything here runs on host-only fault planes (``tests/_fault_plane``):
+the token streams are the deterministic ``token_for`` closed form, so the
+typed drain() results can be asserted exactly without a device.
+"""
+
+import argparse
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from tests._fault_plane import expected_output, make_replica, token_for
+from repro.serve import (
+    AsyncDetokenizer,
+    Replica,
+    ReplicaRouter,
+    Request,
+    SamplingParams,
+    ServeConfig,
+    ServeRequest,
+    ServeResult,
+)
+from repro.serve.api import RequestTiming, to_internal
+
+pytestmark = pytest.mark.slo
+
+
+def make_router(n=1, **kw):
+    replicas, planes = [], []
+    for r in range(n):
+        sched, plane = make_replica(replica_id=r, **kw)
+        sched.attach_stream(AsyncDetokenizer(counters=sched.counters))
+        replicas.append(Replica(replica_id=r, scheduler=sched, plane=plane))
+        planes.append(plane)
+    return ReplicaRouter(replicas), planes
+
+
+def sreq(prompt_len=5, max_new=4, **kw):
+    return ServeRequest(prompt=np.arange(1, prompt_len + 1, dtype=np.int64),
+                        max_new_tokens=max_new, **kw)
+
+
+class TestServeRequest:
+    def test_prompt_coerced_to_int32(self):
+        r = sreq()
+        assert r.prompt.dtype == np.int32
+
+    def test_empty_prompt_rejected(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            ServeRequest(prompt=np.array([], np.int32), max_new_tokens=4)
+
+    def test_zero_budget_rejected(self):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            sreq(max_new=0)
+
+    def test_to_internal_req_id_resolution(self):
+        assert to_internal(sreq(req_id=9)).req_id == 9
+        assert to_internal(sreq(), req_id=3).req_id == 3
+        assert to_internal(sreq(req_id=9), req_id=3).req_id == 9  # explicit wins
+        with pytest.raises(ValueError, match="req_id required"):
+            to_internal(sreq())
+
+
+class TestSamplingParams:
+    def test_conflict_raises_at_submit(self):
+        cfg = ServeConfig(num_pages=8)          # greedy=True default
+        with pytest.raises(ValueError, match="engine-global"):
+            to_internal(sreq(sampling=SamplingParams(greedy=False,
+                                                     temperature=0.7)),
+                        req_id=0, cfg=cfg)
+
+    def test_matching_params_pass(self):
+        cfg = ServeConfig(num_pages=8)
+        r = to_internal(sreq(sampling=SamplingParams(greedy=True)),
+                        req_id=0, cfg=cfg)
+        assert r.req_id == 0
+
+    def test_temperature_ignored_when_both_greedy(self):
+        # greedy sampling never reads temperature; only the greedy bit
+        # must agree
+        cfg = ServeConfig(num_pages=8)
+        to_internal(sreq(sampling=SamplingParams(greedy=True,
+                                                 temperature=9.0)),
+                    req_id=0, cfg=cfg)
+
+
+class TestServeConfigValidation:
+    def test_bucket_not_page_multiple(self):
+        with pytest.raises(ValueError, match="multiples of"):
+            ServeConfig(page_size=4, num_pages=8, aot_buckets=(6,))
+
+    def test_bucket_beyond_reach(self):
+        with pytest.raises(ValueError, match="reach"):
+            ServeConfig(page_size=4, num_pages=64, max_pages_per_seq=2,
+                        aot_buckets=(16,))
+
+    def test_buckets_normalized_sorted_unique(self):
+        cfg = ServeConfig(page_size=4, num_pages=64,
+                          aot_buckets=(16, 8, 16))
+        assert cfg.aot_buckets == (8, 16)
+
+    def test_empty_buckets_become_none(self):
+        assert ServeConfig(num_pages=8, aot_buckets=()).aot_buckets is None
+
+    def test_bad_kv_dtype_and_mesh(self):
+        with pytest.raises(ValueError, match="kv_dtype"):
+            ServeConfig(num_pages=8, kv_dtype="fp8")
+        with pytest.raises(ValueError, match="serve_mesh"):
+            ServeConfig(num_pages=8, serve_mesh="ring")
+
+
+class TestFromArgs:
+    def _parse(self, argv):
+        ap = argparse.ArgumentParser()
+        ServeConfig.add_args(ap)
+        return ap.parse_args(argv)
+
+    def test_defaults_round_trip(self):
+        cfg = ServeConfig.from_args(self._parse([]))
+        assert cfg.page_size == 8 and cfg.aot_buckets is None
+        assert cfg.kv_dtype == "native" and cfg.serve_mesh == "off"
+
+    def test_bucket_flag_parses_and_off(self):
+        cfg = ServeConfig.from_args(
+            self._parse(["--aot-buckets", "16,8", "--page-size", "4"]))
+        assert cfg.aot_buckets == (8, 16)
+        assert ServeConfig.from_args(
+            self._parse(["--aot-buckets", "off"])).aot_buckets is None
+
+    def test_overrides_win(self):
+        cfg = ServeConfig.from_args(self._parse(["--max-batch", "2"]),
+                                    max_batch=7, max_pages_per_seq=5)
+        assert cfg.max_batch == 7 and cfg.max_pages_per_seq == 5
+
+    def test_invalid_flag_combo_raises(self):
+        with pytest.raises(ValueError, match="multiples of"):
+            ServeConfig.from_args(
+                self._parse(["--aot-buckets", "6", "--page-size", "4"]))
+
+    def test_describe_names_the_knobs(self):
+        cfg = ServeConfig.from_args(
+            self._parse(["--aot-buckets", "8", "--page-size", "4",
+                         "--kv-dtype", "int8"]))
+        d = cfg.describe()
+        for needle in ("page_size=4", "int8", "8"):
+            assert needle in d
+
+
+class TestServeResultTiming:
+    def test_ttft_tpot_math(self):
+        t = RequestTiming(enqueue=1.0, first_token=1.5, last_token=2.5)
+        res = ServeResult(req_id=0, tokens=(1, 2, 3, 4, 5), status="done",
+                          timing=t, pages_peak=2)
+        assert res.ttft == pytest.approx(0.5)
+        assert res.tpot == pytest.approx(1.0 / 4)
+
+    def test_single_token_tpot_no_div_zero(self):
+        t = RequestTiming(enqueue=0.0, first_token=1.0, last_token=1.0)
+        res = ServeResult(req_id=0, tokens=(1,), status="done",
+                          timing=t, pages_peak=1)
+        assert res.tpot == 0.0
+
+
+class TestTypedSubmitDrain:
+    def test_auto_req_id_and_typed_results(self):
+        router, _ = make_router()
+        rids = [router.submit(sreq(prompt_len=4 + i, max_new=4))
+                for i in range(3)]
+        assert rids == [0, 1, 2]
+        results = router.drain()
+        assert set(results) == {0, 1, 2}
+        for rid, res in results.items():
+            assert isinstance(res, ServeResult)
+            assert res.status == "done"
+            assert list(res.tokens) == [int(token_for(rid, j))
+                                        for j in range(4)]
+            assert res.pages_peak > 0
+            assert res.timing.enqueue <= res.timing.first_token \
+                <= res.timing.last_token
+            assert res.ttft > 0
+
+    def test_explicit_id_advances_allocator(self):
+        router, _ = make_router()
+        assert router.submit(sreq(req_id=5)) == 5
+        assert router.submit(sreq()) == 6      # allocator skipped past 5
+
+    def test_internal_request_deprecated_but_works(self):
+        router, _ = make_router()
+        internal = Request(req_id=0, prompt=np.arange(1, 6, dtype=np.int32),
+                           max_new_tokens=4)
+        with pytest.warns(DeprecationWarning, match="ServeRequest"):
+            router.submit(internal)
+        results = router.drain()
+        assert list(results[0].tokens) == expected_output(internal)
+
+
+class TestTimerCapturePoint:
+    def test_stream_lag_cannot_skew_ttft_tpot(self):
+        """The regression this PR's timing satellite exists for: stamps
+        are captured by the scheduler at host-visible commit, so a
+        stream callback blocked for ~100ms per event must leave
+        TTFT/TPOT at fault-plane scale (microseconds), not callback
+        scale."""
+        gate = threading.Event()
+
+        def blocked(ev):
+            gate.wait(timeout=10.0)
+
+        router, _ = make_router()
+        n_new = 4
+        rid = router.submit(sreq(max_new=n_new, stream_callback=blocked))
+        t0 = time.perf_counter()
+        # drive to completion while the detokenizer is wedged: run() does
+        # not touch the stream thread
+        router.run()
+        elapsed = time.perf_counter() - t0
+        req = router.done[rid]
+        span = req.t_last_token - req.t_first_token
+        assert span <= elapsed            # stamped during the run, pre-drain
+        gate.set()
+        results = router.drain()          # delivery happens ONLY now
+        assert results[rid].tpot * (n_new - 1) == pytest.approx(span)
+
+    def test_enqueue_stamped_at_router_entry(self):
+        """Global-queue wait is part of TTFT: the router stamps
+        t_enqueue at submit, before any replica sees the request."""
+        router, _ = make_router()
+        rid = router.submit(sreq())
+        t_submitted = time.perf_counter()
+        queued = router.replicas[0].scheduler.queue[0]
+        assert queued.req_id == rid
+        assert 0.0 < queued.t_enqueue <= t_submitted
+        time.sleep(0.02)                  # queue wait before any step
+        results = router.drain()
+        assert results[rid].ttft >= 0.02

@@ -21,7 +21,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve import Engine, ReferenceEngine, Request, ServeConfig
+from repro.serve import Engine, ReferenceEngine, ServeConfig, ServeRequest
+from repro.serve.api import to_internal
 
 KEY = jax.random.PRNGKey(0)
 
@@ -36,7 +37,7 @@ def model_and_params():
 def mixed_workload(cfg, n=7, seed=13, max_new=12):
     rng = np.random.default_rng(seed)
     return [
-        Request(
+        ServeRequest(
             req_id=i,
             prompt=rng.integers(
                 0, cfg.vocab_size, size=int(rng.integers(4, 14))
@@ -52,7 +53,9 @@ def run_engine(eng_cls, model, params, serve_cfg, reqs, prefix=None):
     if prefix is not None:
         eng.preload_prefix(prefix)
     for r in reqs:
-        eng.submit(copy.deepcopy(r))
+        r = copy.deepcopy(r)
+        # the frozen seed engine predates the typed surface: lower explicitly
+        eng.submit(to_internal(r) if eng_cls is ReferenceEngine else r)
     done = eng.run()
     return eng, done
 
@@ -88,10 +91,10 @@ class TestSeedEquivalence:
         rng = np.random.default_rng(17)
         prefix = rng.integers(0, cfg.vocab_size, size=22).astype(np.int32)
         reqs = [
-            Request(req_id=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=int(l))
-                    .astype(np.int32),
-                    max_new_tokens=8, share_prefix=True)
+            ServeRequest(req_id=i,
+                         prompt=rng.integers(0, cfg.vocab_size, size=int(l))
+                         .astype(np.int32),
+                         max_new_tokens=8, share_prefix=True)
             for i, l in enumerate([3, 6, 9])
         ]
         serve_cfg = ServeConfig(page_size=4, num_pages=64,
@@ -119,10 +122,10 @@ class TestBatchedForkAdmission:
         rng = np.random.default_rng(23)
         prefix = rng.integers(0, cfg.vocab_size, size=13).astype(np.int32)
         reqs = [
-            Request(req_id=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=int(l))
-                    .astype(np.int32),
-                    max_new_tokens=6, share_prefix=True)
+            ServeRequest(req_id=i,
+                         prompt=rng.integers(0, cfg.vocab_size, size=int(l))
+                         .astype(np.int32),
+                         max_new_tokens=6, share_prefix=True)
             for i, l in enumerate([1, 7, 12])
         ]
         serve_cfg = ServeConfig(page_size=8, num_pages=64,
@@ -163,7 +166,7 @@ class TestRestoreLivelock:
             rng.integers(0, cfg.vocab_size, size=10).astype(np.int32))
         # mapped lifetime 10+30+23 = 63 tokens = 8 pages; 7 own while
         # sharing (admissible), 8 unshared (beyond the 7 attainable frames)
-        eng.submit(Request(
+        eng.submit(ServeRequest(
             req_id=0,
             prompt=rng.integers(0, cfg.vocab_size, size=30).astype(np.int32),
             max_new_tokens=24, share_prefix=True))
@@ -174,7 +177,7 @@ class TestRestoreLivelock:
                 break
         assert 0 in eng.scheduler.running   # nearly done, still resident
         # late pressure forces the spill at ~63 tokens
-        eng.submit(Request(
+        eng.submit(ServeRequest(
             req_id=1,
             prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
             max_new_tokens=4))
@@ -230,7 +233,7 @@ class TestHotPathContracts:
             rng.integers(0, cfg.vocab_size, size=6).astype(np.int32))
         for i, (l, fork) in enumerate(
                 [(5, True), (9, False), (7, True), (11, False), (6, True)]):
-            eng.submit(Request(
+            eng.submit(ServeRequest(
                 req_id=i,
                 prompt=rng.integers(0, cfg.vocab_size, size=l)
                 .astype(np.int32),

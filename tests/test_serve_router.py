@@ -31,7 +31,7 @@ from _fault_plane import (
     expected_output,
     make_replica,
 )
-from repro.serve import Replica, ReplicaRouter, Request
+from repro.serve import Replica, ReplicaRouter, Request, ServeRequest
 
 pytestmark = pytest.mark.router
 
@@ -410,11 +410,11 @@ class TestRouterRealEngines:
     @staticmethod
     def _workload(cfg, n, seed, max_new=8):
         rng = np.random.default_rng(seed)
-        return [Request(req_id=i,
-                        prompt=rng.integers(0, cfg.vocab_size,
-                                            size=int(rng.integers(5, 12))
-                                            ).astype(np.int32),
-                        max_new_tokens=max_new) for i in range(n)]
+        return [ServeRequest(req_id=i,
+                             prompt=rng.integers(0, cfg.vocab_size,
+                                                 size=int(rng.integers(5, 12))
+                                                 ).astype(np.int32),
+                             max_new_tokens=max_new) for i in range(n)]
 
     def _reference(self, real_setup, reqs):
         from repro.serve import Engine

@@ -28,7 +28,7 @@ import pytest
 from repro.configs import get_config
 from repro.launch.mesh import make_host_serve_mesh
 from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, ServeConfig, ServeRequest
 
 pytestmark = [
     pytest.mark.sharded,
@@ -53,11 +53,11 @@ def setup():
 def workload(cfg, n, seed, max_new=12, lo=4, hi=14, share=False):
     rng = np.random.default_rng(seed)
     return [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(lo, hi))
-                                    ).astype(np.int32),
-                max_new_tokens=max_new, share_prefix=share)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(lo, hi))
+                                         ).astype(np.int32),
+                     max_new_tokens=max_new, share_prefix=share)
         for i in range(n)
     ]
 

@@ -1,0 +1,115 @@
+"""Open-loop serving harness properties (``benchmarks/bench_serve_slo``):
+seeded-Poisson arrival determinism and open-vs-closed-loop scheduling
+transparency over the fault-plane router, with streaming attached.
+
+The SLO bench gates real engines on these properties; this suite pins
+them on host-only planes where the token streams have a closed form
+(``token_for``), so a violation localizes to the harness/scheduling
+logic instead of surfacing as a device-level token diff.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.bench_serve_slo import _drive_open_loop, poisson_arrival_steps
+from tests._fault_plane import make_replica, token_for
+from repro.serve import AsyncDetokenizer, Replica, ReplicaRouter, ServeRequest
+
+pytestmark = pytest.mark.slo
+
+
+def make_router(n=1, **kw):
+    replicas = []
+    for r in range(n):
+        sched, plane = make_replica(replica_id=r, **kw)
+        sched.attach_stream(AsyncDetokenizer(counters=sched.counters))
+        replicas.append(Replica(replica_id=r, scheduler=sched, plane=plane))
+    return ReplicaRouter(replicas)
+
+
+def _requests(n, sink=None, max_new=5, plen=5):
+    rng = np.random.default_rng(3)
+    return [
+        ServeRequest(
+            prompt=rng.integers(1, 1000, size=plen).astype(np.int32),
+            max_new_tokens=max_new, req_id=i, stream_callback=sink,
+        )
+        for i in range(n)
+    ]
+
+
+class TestPoissonDeterminism:
+    def test_same_seed_same_schedule(self):
+        a = poisson_arrival_steps(4.0, 32, seed=9)
+        b = poisson_arrival_steps(4.0, 32, seed=9)
+        np.testing.assert_array_equal(a, b)
+
+    def test_different_seed_differs(self):
+        a = poisson_arrival_steps(4.0, 32, seed=9)
+        b = poisson_arrival_steps(4.0, 32, seed=10)
+        assert not np.array_equal(a, b)
+
+    def test_shape_and_monotonicity(self):
+        a = poisson_arrival_steps(2.0, 16, seed=0)
+        assert a.shape == (16,) and a.dtype == np.int64
+        assert (np.diff(a) >= 0).all() and a[0] >= 0
+
+    def test_rate_scales_the_schedule(self):
+        # 10x the rate => arrivals land ~10x earlier on the step clock
+        slow = poisson_arrival_steps(1.0, 64, seed=1)
+        fast = poisson_arrival_steps(10.0, 64, seed=1)
+        assert fast[-1] < slow[-1]
+
+
+class TestOpenLoopTransparency:
+    @pytest.mark.parametrize("n_replicas", [1, 2])
+    def test_open_vs_closed_token_identity_with_streaming(self, n_replicas):
+        """Per-request streams must be independent of WHEN requests
+        arrive (open-loop Poisson vs all-up-front) and of the replica
+        count — and the streamed events must equal the drained results,
+        in per-request index order."""
+        n, max_new = 6, 5
+        closed = make_router(n_replicas)
+        for r in _requests(n):
+            closed.submit(r)
+        want = {rid: [int(t) for t in res.tokens]
+                for rid, res in closed.drain().items()}
+        # the fault-plane closed form: identity holds against it too
+        assert want == {i: [int(token_for(i, j)) for j in range(max_new)]
+                        for i in range(n)}
+
+        streamed: dict[int, list] = {}
+
+        def sink(ev):
+            streamed.setdefault(ev.req_id, []).append(ev)
+
+        router = make_router(n_replicas)
+        arrivals = poisson_arrival_steps(3.0, n, seed=21)
+        depths = _drive_open_loop(router, _requests(n, sink), arrivals)
+        got = {rid: [int(t) for t in res.tokens]
+               for rid, res in router.drain().items()}
+        assert got == want
+        assert {rid: [int(e.token) for e in evs]
+                for rid, evs in streamed.items()} == want
+        for rid, evs in streamed.items():
+            assert [e.index for e in evs] == list(range(max_new))
+            assert [e.final for e in evs] == [False] * (max_new - 1) + [True]
+        assert len(depths) >= int(arrivals[-1])  # ran through the last arrival
+
+    def test_queue_depth_trace_sees_the_backlog(self):
+        """A burst arriving at step 0 against a 3-slot replica must show
+        up in the depth trace (the SLO bench's queue observable)."""
+        router = make_router(1)
+        arrivals = np.zeros(6, np.int64)
+        depths = _drive_open_loop(router, _requests(6), arrivals)
+        assert max(depths) >= 3               # more work than slots
+        assert depths[-1] == 0                # drained
+
+    def test_undrained_run_raises(self):
+        # one fused-horizon step delivers at most max_horizon tokens, so
+        # a 25-token budget cannot drain within 2 steps — the guard must
+        # fire rather than loop forever
+        router = make_router(1)
+        with pytest.raises(RuntimeError, match="drain"):
+            _drive_open_loop(router, _requests(2, max_new=25),
+                             np.zeros(2, np.int64), max_steps=2)

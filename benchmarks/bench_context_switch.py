@@ -39,18 +39,18 @@ def engine_preemption() -> list[str]:
 
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serve import Engine, Request, ServeConfig
+    from repro.serve import Engine, ServeConfig, ServeRequest
 
     cfg = get_config("qwen2-7b", reduced=True)
     model = build_model(cfg, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = [
-        Request(req_id=i,
-                prompt=rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(6, 16))
-                                    ).astype(np.int32),
-                max_new_tokens=12)
+        ServeRequest(req_id=i,
+                     prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(6, 16))
+                                         ).astype(np.int32),
+                     max_new_tokens=12)
         for i in range(6)
     ]
     eng = Engine(model, params, ServeConfig(

@@ -1,0 +1,238 @@
+"""Restore migration + partial restore: no request fails while any
+replica can host it.
+
+Two phases, both on real engines (qwen2-7b reduced), both gated:
+
+**Phase 1 — skewed two-replica fleet.**  A heterogeneous pool pair (a
+tight 8-page replica next to a roomy 64-page one) takes a mixed load:
+"long" requests whose lifetime footprint exceeds the small replica's
+attainable pages, interleaved with "short" requests that fit it but
+overlap enough to preempt each other.  The ``migrate=False`` baseline is
+reach-blind, so least-loaded placement feeds a long request to the small
+replica where admission must fail it (``failed_unreachable > 0``) — the
+stranding the tentpole exists to kill.  The migrating run must:
+
+  * redirect every unreachable placement to the roomy replica
+    (``reach_redirects > 0``) and fail NOTHING
+    (``failed_unreachable == 0``);
+  * move at least one capacity-starved swap victim off the contended
+    small replica through the portable-swap path
+    (``restore_migrations > 0`` — export at the source, import + restore
+    + decode on the destination's pool, real KV bytes);
+  * stay per-request token-identical to a single roomy-replica reference
+    (migration is a timing policy, never a token policy);
+  * leave no swap record behind on either ``ContextSwitcher`` at drain
+    (the leak-audit satellite, on real planes).
+
+**Phase 2 — partial restore on one tight replica.**  Two requests whose
+pools overlap by exactly one page fault force a preemption; the runner
+then sits at its lifetime maximum, so the victim's full restore can
+never fit while it lives.  With ``restore_patience`` armed the scheduler
+restores the longest page-aligned prefix that fits and re-prefills only
+the evicted tail through the continuation path — the run must show
+``partial_restores > 0`` / ``pages_refilled > 0`` with NO full restore
+wait, stay token-identical to the roomy reference, and again hold the
+empty-switcher leak audit.
+
+``benchmarks/run.py --only migrate`` gates on all of the above and
+appends the metrics to ``BENCH_serve.json`` (section ``migrate``);
+``scripts/bench_regress.py`` holds ``failed_unreachable`` /
+``restore_migrations`` / ``partial_restores`` across PRs — counters
+only, never wall-clock.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+
+def _mixed_load(cfg):
+    """Long requests (lifetime 8 pages — over the small replica's 7) and
+    short ones (6 pages — admit on the small replica but preempt each
+    other), submission-ordered so the FIRST placement is a long request:
+    least-loaded tie-breaking sends it to replica 0 (the small pool),
+    which is exactly the reach-blind stranding the baseline must show."""
+    from repro.serve import ServeRequest
+
+    rng = np.random.default_rng(23)
+
+    def sreq(i, plen, max_new):
+        return ServeRequest(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=plen
+                                ).astype(np.int32),
+            max_new_tokens=max_new)
+
+    return [
+        sreq(0, plen=24, max_new=8),    # long: pf(32) = 8 pages
+        sreq(1, plen=10, max_new=12),   # short: pf(22) = 6 pages
+        sreq(2, plen=24, max_new=8),    # long
+        sreq(3, plen=10, max_new=12),   # short
+        sreq(4, plen=10, max_new=12),   # short
+    ]
+
+
+def _outputs(done):
+    return {i: [int(x) for x in done[i].output] for i in done}
+
+
+def run() -> tuple[list[str], dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import Engine, ReplicaRouter, ServeConfig
+
+    cfg = get_config("qwen2-7b", reduced=True)
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # max_horizon=1 on the contended replicas keeps preemption points
+    # page-granular (a fused horizon would batch right past the faults
+    # this scenario exists to hit); the reference shares it so spill
+    # timing differences are the ONLY variable under test
+    big_cfg = ServeConfig(page_size=4, num_pages=64, max_pages_per_seq=32,
+                          max_batch=4, max_horizon=1)
+    small_cfg = ServeConfig(page_size=4, num_pages=8, max_pages_per_seq=8,
+                            max_batch=3, max_horizon=1)
+    reqs = _mixed_load(cfg)
+
+    # ---- roomy single-replica reference: the token oracle -------------
+    ref = Engine(model, params, big_cfg)
+    for r in reqs:
+        ref.submit(copy.deepcopy(r))
+    ref_done = ref.run()
+    ref_out = _outputs(ref_done)
+    assert all(r.status == "done" for r in ref_done.values())
+
+    def fleet(migrate):
+        small = Engine(model, params, small_cfg)
+        big = Engine(model, params, big_cfg)
+        router = ReplicaRouter([small.as_replica(0), big.as_replica(1)],
+                               migrate=migrate, migrate_after=3)
+        for r in reqs:
+            router.submit(copy.deepcopy(r))
+        done = router.run()
+        return router, (small, big), done
+
+    # ---- baseline: reach-blind, no migration — must strand -------------
+    base_router, base_engines, base_done = base = fleet(migrate=False)
+    base_total = base_router.global_counters()
+    base_failed = int(base_total["failed_unreachable"])
+    base_done_ok = sum(r.status == "done" for r in base_done.values())
+    print(f"baseline (migrate=False): {base_failed} failed unreachable, "
+          f"{base_done_ok}/{len(reqs)} done")
+
+    # ---- migrating fleet: nothing may fail, tokens must match ----------
+    mig_router, mig_engines, mig_done = fleet(migrate=True)
+    total = mig_router.global_counters()
+    mig_failed = int(total["failed_unreachable"])
+    token_identical = (
+        _outputs(mig_done) == ref_out
+        and all(r.status == "done" for r in mig_done.values())
+    )
+    accounting_ok = True
+    try:
+        mig_router.check_invariants()
+        base_router.check_invariants()
+    except AssertionError as e:
+        accounting_ok = False
+        print(f"FAIL (accounting): {e}")
+    swap_leaks = sum(
+        len(eng.switcher.swapped_out)
+        for eng in (*base_engines, *mig_engines)
+    )
+    print(f"migrating fleet: {mig_failed} failed unreachable, "
+          f"{int(total['restore_migrations'])} restore migrations "
+          f"({int(total['swap_exports'])} exports / "
+          f"{int(total['swap_imports'])} imports, "
+          f"{int(total['migration_aborts'])} aborts), "
+          f"{int(mig_router.counters.get('reach_redirects'))} reach "
+          f"redirects, token-identical {token_identical}, "
+          f"{swap_leaks} leaked swap records")
+
+    # ---- phase 2: partial restore on one tight replica -----------------
+    # P0 (4 pages at admit, 5 lifetime) + P1 (3 pages at admit, 5
+    # lifetime) fill the 7 usable pages exactly; the first growth fault
+    # preempts one of them, the survivor parks at its 5-page lifetime
+    # maximum, and the victim's full restore (4-5 pages) can never fit
+    # the 2 remaining frames while it lives — only a partial restore
+    # (patience 2) brings it back before the pool drains
+    rng = np.random.default_rng(31)
+    part_cfg = ServeConfig(page_size=4, num_pages=8, max_pages_per_seq=8,
+                           max_batch=3, max_horizon=1, restore_patience=2)
+    from repro.serve import ServeRequest
+    part_reqs = [
+        ServeRequest(req_id=0,
+                     prompt=rng.integers(0, cfg.vocab_size, size=16
+                                         ).astype(np.int32),
+                     max_new_tokens=4),
+        ServeRequest(req_id=1,
+                     prompt=rng.integers(0, cfg.vocab_size, size=12
+                                         ).astype(np.int32),
+                     max_new_tokens=8),
+    ]
+    part_ref = Engine(model, params, big_cfg)
+    for r in part_reqs:
+        part_ref.submit(copy.deepcopy(r))
+    part_ref_out = _outputs(part_ref.run())
+
+    part_eng = Engine(model, params, part_cfg)
+    for r in part_reqs:
+        part_eng.submit(copy.deepcopy(r))
+    part_done = part_eng.run()
+    pc = part_eng.counters
+    partial_restores = int(pc.get("partial_restores"))
+    pages_refilled = int(pc.get("pages_refilled"))
+    part_identical = (
+        _outputs(part_done) == part_ref_out
+        and all(r.status == "done" for r in part_done.values())
+    )
+    part_leaks = len(part_eng.switcher.swapped_out)
+    swap_leaks += part_leaks
+    print(f"partial restore: {partial_restores} partial restores, "
+          f"{pages_refilled} pages refilled, "
+          f"{int(pc.get('restores'))} full restores, "
+          f"token-identical {part_identical}, "
+          f"{part_leaks} leaked swap records")
+
+    metrics = {
+        "token_identical": bool(token_identical),
+        "partial_token_identical": bool(part_identical),
+        "accounting_identical": bool(accounting_ok),
+        "failed_unreachable_baseline": base_failed,
+        "failed_unreachable_migrate": mig_failed,
+        "restore_migrations": int(total["restore_migrations"]),
+        "migration_aborts": int(total["migration_aborts"]),
+        "swap_exports": int(total["swap_exports"]),
+        "swap_imports": int(total["swap_imports"]),
+        "reach_redirects": int(mig_router.counters.get("reach_redirects")),
+        "second_chance_restores": int(total["second_chance_restores"]),
+        "partial_restores": partial_restores,
+        "pages_refilled": pages_refilled,
+        "swap_record_leaks": int(swap_leaks),
+    }
+    csv = [
+        f"migrate_token_identical,0,{int(token_identical)}",
+        f"migrate_partial_token_identical,0,{int(part_identical)}",
+        f"migrate_failed_unreachable_baseline,0,{base_failed}",
+        f"migrate_failed_unreachable,0,{mig_failed}",
+        f"migrate_restore_migrations,0,{metrics['restore_migrations']}",
+        f"migrate_reach_redirects,0,{metrics['reach_redirects']}",
+        f"migrate_partial_restores,0,{partial_restores}",
+        f"migrate_pages_refilled,0,{pages_refilled}",
+        f"migrate_swap_record_leaks,0,{swap_leaks}",
+    ]
+    del base  # keep the baseline alive through the leak audit above
+    return csv, metrics
+
+
+def main() -> list[str]:
+    csv, _ = run()
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -15,12 +15,13 @@ contract).  Sections (select a subset with ``--only``):
   prefix   — radix prefix cache: multi-turn chat, warm/cold  (bench_prefix_cache)
   quant    — int8 KV pools: accuracy envelope + bytes halved (bench_kv_quant)
   slo      — open-loop Poisson vs AOT-bucketed router        (bench_serve_slo)
+  migrate  — swap migration + partial restore       (bench_restore_migration)
   c2       — burst vs element translation (+ coalescing)     (bench_translation)
   prefill  — gathered vs streamed continuation prefill       (bench_prefill_continue)
   pagesize — page-size sweep (TPU dual of the TLB sweep)     (bench_page_size)
   roof     — dry-run roofline table                          (roofline)
 
-Six sections double as CI gates when explicitly selected:
+Seven sections double as CI gates when explicitly selected:
   * ``--only prefill`` exits nonzero if the chunked-prefill kernel path
     gathers at least as many bytes as the gathered-pages reference path;
   * ``--only serve`` exits nonzero unless auto-horizon greedy outputs are
@@ -61,10 +62,23 @@ Six sections double as CI gates when explicitly selected:
     per-request token-identical to a closed-loop unbucketed reference,
     the streamed events match the drained results, and after warmup
     ``aot_misses == 0`` with ``aot_hits > 0``.  TTFT/TPOT p50/p99 and
-    queue depth are recorded, never wall-clock-gated.
+    queue depth are recorded, never wall-clock-gated;
+  * ``--only migrate`` exits nonzero unless the skewed heterogeneous
+    two-replica fleet with migration ON completes EVERY request
+    token-identically to the roomy single-replica reference with
+    ``failed_unreachable == 0``, ``reach_redirects > 0`` and
+    ``restore_migrations > 0`` (real KV pages exported from the starved
+    small pool and adopted by the roomy one), while the reach-blind
+    ``migrate=False`` baseline on the SAME load shows
+    ``failed_unreachable > 0`` (the stranding being fixed — a baseline
+    that stops failing means the scenario went vacuous, which is also a
+    gate failure); the tight-pool partial-restore phase must show
+    ``partial_restores > 0`` / ``pages_refilled > 0`` token-identically,
+    and no engine may leak a swap record
+    (``ContextSwitcher.swapped_out`` empty at every drain).
 
-The serve, sharded, router, prefix, quant and slo sections also append
-their metrics (tagged
+The serve, sharded, router, prefix, quant, slo and migrate sections also
+append their metrics (tagged
 with a ``section`` field) to ``BENCH_serve.json`` at the repo root — the
 machine-readable perf trajectory across PRs, which
 ``scripts/bench_regress.py`` gates on per section (counters only, never
@@ -317,6 +331,60 @@ def _slo(gate: bool = False):
     return csv
 
 
+def _migrate(gate: bool = False):
+    from benchmarks import bench_restore_migration
+    csv, metrics = bench_restore_migration.run()
+    _record_serve_trajectory(metrics, section="migrate")
+    failures = []
+    if not metrics["token_identical"]:
+        failures.append(
+            "migrating-fleet outputs diverged from the roomy single-replica "
+            "reference (or a request did not finish) — migration must be a "
+            "timing policy, never a token policy")
+    if not metrics["partial_token_identical"]:
+        failures.append(
+            "partial-restore outputs diverged from the roomy reference (or "
+            "a request did not finish) — the re-prefilled tail must "
+            "reproduce the evicted KV exactly")
+    if not metrics["accounting_identical"]:
+        failures.append(
+            "router global page/counter accounting != sum of per-replica "
+            "accounting after migration")
+    if metrics["failed_unreachable_migrate"] != 0:
+        failures.append(
+            f"failed_unreachable = {metrics['failed_unreachable_migrate']} "
+            "with migration ON (must be 0: no request may fail while any "
+            "replica can host it)")
+    if metrics["failed_unreachable_baseline"] <= 0:
+        failures.append(
+            "the migrate=False baseline stranded nothing — the skewed "
+            "workload no longer exercises the failure the gate exists to "
+            "prevent (vacuous scenario)")
+    if metrics["restore_migrations"] <= 0:
+        failures.append(
+            "restore_migrations == 0: no starved victim ever moved through "
+            "the portable-swap path — the migration machinery went inert")
+    if metrics["reach_redirects"] <= 0:
+        failures.append(
+            "reach_redirects == 0: placement never overrode a reach-blind "
+            "choice on the heterogeneous fleet")
+    if metrics["partial_restores"] <= 0 or metrics["pages_refilled"] <= 0:
+        failures.append(
+            f"partial_restores = {metrics['partial_restores']}, "
+            f"pages_refilled = {metrics['pages_refilled']} (both must be "
+            "> 0: the capacity-blocked head never came back early)")
+    if metrics["swap_record_leaks"] != 0:
+        failures.append(
+            f"{metrics['swap_record_leaks']} swap records left on a "
+            "ContextSwitcher at drain — a terminal path forgot to "
+            "restore/export/discard its spill")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures and gate:          # --only migrate: act as a CI gate
+        sys.exit(1)
+    return csv
+
+
 def _c2():
     from benchmarks import bench_translation
     return bench_translation.main()
@@ -365,6 +433,9 @@ SECTIONS: list[tuple[str, str, object]] = [
     ("slo",
      "Open-loop SLO: Poisson arrivals vs AOT-bucketed router (TTFT/TPOT)",
      _slo),
+    ("migrate",
+     "Swap migration: skewed heterogeneous fleet + partial restore",
+     _migrate),
     ("c2", "C2: translation counts (burst / element / coalesced)", _c2),
     ("prefill",
      "Chunked prefill: gathered-pages oracle vs page-streaming kernel",
@@ -389,7 +460,7 @@ def main(argv: list[str] | None = None) -> None:
             continue
         section(title)
         if key in ("prefill", "serve", "sharded", "router", "prefix",
-                   "quant", "slo"):
+                   "quant", "slo", "migrate"):
             # the gates abort only when explicitly selected; a full run
             # must still emit the complete CSV block
             csv += fn(gate=args.only is not None)

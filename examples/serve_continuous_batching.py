@@ -22,13 +22,13 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import CostModel
 from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import Engine, ServeConfig, ServeRequest
 
 
 def make_requests(cfg, n=8, seed=0):
     rng = np.random.default_rng(seed)
     return [
-        Request(
+        ServeRequest(
             req_id=i,
             prompt=rng.integers(
                 0, cfg.vocab_size, size=int(rng.integers(5, 14))

@@ -33,8 +33,8 @@ REL_SLACK = 1e-6    # float round-trip noise, not a behavioral allowance
 
 #: per-section (name, extractor, direction): "le" = new must stay <=
 #: prev, "ge" = >=.  ``BENCH_serve.json`` interleaves records from the
-#: ``serve``, ``sharded``, ``router``, ``prefix``, ``quant`` and ``slo``
-#: gates
+#: ``serve``, ``sharded``, ``router``, ``prefix``, ``quant``, ``slo``
+#: and ``migrate`` gates
 #: (tagged with a "section" field; untagged legacy records read as ``serve`` for
 #: backward compatibility, though the checked-in trajectory is fully
 #: tagged — ``tests/test_benchmarks.py`` asserts that), so each section
@@ -89,6 +89,23 @@ CHECKS_BY_SECTION = {
          lambda m: float(m["aot_misses"]), "le"),
         ("bucket_pad_per_prefill_token",
          lambda m: float(m["bucket_pad_per_prefill_token"]), "le"),
+    ),
+    # the migration gate: with migration ON nothing may ever fail as
+    # unreachable (hard 0-vs-0 in practice — "le" vs the previous record
+    # keeps the check meaningful even if the floor ever moved), and the
+    # scenario's rescue volume must never shrink: fewer migrations or
+    # partial restores on the SAME skewed workload means victims waited
+    # out the outage (or failed) instead of being moved/partially
+    # restored — exact scheduler/router event counts, zero noise
+    "migrate": (
+        ("failed_unreachable_migrate",
+         lambda m: float(m["failed_unreachable_migrate"]), "le"),
+        ("restore_migrations",
+         lambda m: float(m["restore_migrations"]), "ge"),
+        ("partial_restores",
+         lambda m: float(m["partial_restores"]), "ge"),
+        ("swap_record_leaks",
+         lambda m: float(m["swap_record_leaks"]), "le"),
     ),
     # the quantized-KV gate: bytes-per-page must never creep back up
     # (quantization silently widening), the greedy top-1 accuracy

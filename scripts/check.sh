@@ -19,6 +19,11 @@
 #      the itemsize ratio) + slo gate (`--only slo`: open-loop Poisson
 #      arrivals vs the AOT-bucketed router — token identity vs the
 #      closed-loop unbucketed reference, aot_misses == 0 after warmup)
+#      + migrate gate (`--only migrate`: skewed heterogeneous fleet —
+#      the reach-blind baseline must strand requests, migration +
+#      partial restore must complete all of them token-identically with
+#      restore_migrations > 0 / partial_restores > 0 and no leaked swap
+#      records)
 #      + the counter-based regression gate
 #      (`scripts/bench_regress.py` over BENCH_serve.json, per section);
 #   5. IF >1 host device is advertised: the sharded-kernel differential
@@ -91,6 +96,9 @@ python -m benchmarks.run --only quant
 
 echo "== slo gate (open-loop Poisson: token identity, aot_misses == 0)"
 python -m benchmarks.run --only slo
+
+echo "== migrate gate (swap migration + partial restore: nothing strands)"
+python -m benchmarks.run --only migrate
 
 echo "== serve counter regression gate (BENCH_serve.json trajectory)"
 python scripts/bench_regress.py

@@ -28,7 +28,17 @@ from repro.core.vmem import VirtualMemory
 
 @dataclasses.dataclass
 class SpilledState:
-    """Swap-area record for one preempted request."""
+    """Swap-area record for one preempted request.
+
+    The record is **portable**: ``page_data`` is pure host memory in the
+    pool's storage dtype (int8 pools spill narrow bytes and stay narrow
+    here), and nothing in it references the pool that spilled it — so a
+    record exported from one replica's switcher (:meth:`ContextSwitcher.
+    export_swap`) can be imported into another's (:meth:`ContextSwitcher.
+    import_swap`) and restored there, provided the destination shares the
+    page geometry.  Cross-replica migration of a starved swap victim is
+    exactly that move.
+    """
 
     seq_id: int
     num_tokens: int
@@ -127,6 +137,7 @@ class ContextSwitcher:
     def restore_kv(
         self, seq_id: int, k_pools: jnp.ndarray, v_pools: jnp.ndarray,
         shared_prefix_pages: list[int] | None = None,
+        num_tokens: int | None = None,
     ) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
         """Swap ``seq_id`` back in through a page-granular scatter.
 
@@ -140,24 +151,66 @@ class ContextSwitcher:
         identical to the spilled copy, so they are neither allocated nor
         scattered; only the unshared tail moves.  Restore bandwidth
         (``bytes_restored``/``pages_restored``) counts the moved tail only.
+
+        ``num_tokens``: PARTIAL restore — re-map and scatter only the
+        leading page-aligned ``num_tokens`` of the record (must cover the
+        shared frames).  The evicted tail pages of the record are dropped:
+        the caller re-prefills those positions through the continuation
+        path (causal KV is a pure function of the token prefix, so the
+        recompute is bit-equivalent to the copy).  Either way the swap
+        record is CONSUMED — partial restores never leak a tail record.
         """
         spilled = self._swap[seq_id]
+        keep = spilled.num_tokens if num_tokens is None else int(num_tokens)
+        if not 0 < keep <= spilled.num_tokens:
+            raise ValueError(
+                f"partial restore of seq {seq_id}: num_tokens={keep} "
+                f"outside (0, {spilled.num_tokens}]")
         state = self.vmem.restore_seq(
-            seq_id, spilled.num_tokens, shared_prefix_pages)  # may raise
+            seq_id, keep, shared_prefix_pages)  # may raise
         skip = len(shared_prefix_pages or ())
-        k_data, v_data = spilled.page_data[0], spilled.page_data[1]
-        if skip:
-            k_data, v_data = k_data[:, skip:], v_data[:, skip:]
-        if len(state.pages) > skip:
+        n_keep = len(state.pages)
+        k_data = spilled.page_data[0][:, skip:n_keep]
+        v_data = spilled.page_data[1][:, skip:n_keep]
+        if n_keep > skip:
             pages = jnp.asarray(np.asarray(state.pages[skip:], np.int32))
             k_pools = _scatter_pages(k_pools, pages, jnp.asarray(k_data))
             v_pools = _scatter_pages(v_pools, pages, jnp.asarray(v_data))
         del self._swap[seq_id]
         nbytes = int(k_data.nbytes + v_data.nbytes)
         self.stats.bytes_restored += nbytes
-        self.stats.pages_restored += 2 * (len(state.pages) - skip)
+        self.stats.pages_restored += 2 * (n_keep - skip)
         self.stats.modeled_cycles += self.cost.bytes_move_cycles(nbytes)
         return k_pools, v_pools, spilled.extra_state
+
+    # ---- portable swap records (cross-replica migration) ------------------
+
+    def export_swap(self, seq_id: int) -> SpilledState:
+        """Detach ``seq_id``'s swap record for migration to ANOTHER
+        replica's switcher.  The record is pure host memory in the pool's
+        storage dtype (int8 stays narrow) and its frames were already
+        freed at spill time, so nothing on this replica keeps referencing
+        the victim after the pop.  KeyError if not spilled."""
+        return self._swap.pop(seq_id)
+
+    def import_swap(self, record: SpilledState) -> None:
+        """Adopt a swap record exported from another replica's switcher.
+
+        Validates the page geometry against THIS replica's vmem (the page
+        count the record carries must be what a restore here would re-map)
+        so a mismatched migration fails loudly at import, before any
+        bookkeeping moves."""
+        need = self.vmem.config.pages_for(record.num_tokens)
+        have = int(record.page_data.shape[self.page_axis + 1])
+        if have != need:
+            raise ValueError(
+                f"import_swap of seq {record.seq_id}: record carries "
+                f"{have} pages but {record.num_tokens} tokens need {need} "
+                f"under page_size={self.vmem.config.page_size}")
+        if record.seq_id in self._swap:
+            raise ValueError(
+                f"import_swap: seq {record.seq_id} already spilled here")
+        self._swap[record.seq_id] = record
 
     # ---- spill (whole-pool legacy API, kept for the reference engine) -----
 

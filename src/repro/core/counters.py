@@ -41,6 +41,23 @@ gated per prefill token, "le").  The async stream pipeline adds
 got — a PEAK, not a monotonic count, written directly by the
 detokenizer — the observable for "host post-processing is falling behind
 the device".
+
+Portable swap records add the migration/partial-restore accounting the
+``section:"migrate"`` benchmark gates on.  Scheduler-side:
+``swap_exports`` / ``swap_imports`` (swap records detached from / adopted
+into a replica — every completed migration is one export/import pair,
+every rollback adds one more import at the source), ``partial_restores``
+(capacity-blocked FIFO heads brought back as the longest page-aligned
+prefix that fit, tail re-enqueued for re-prefill), ``pages_refilled``
+(frames re-faulted for those evicted tails at resume admission — the
+price of restoring early, paid in recompute instead of waiting), and
+``second_chance_restores`` (victims behind a ``RestoreFailure``-pinned
+head restored by the bounded scan without popping the head).
+Router-side: ``restore_migrations`` (swapped victims moved to a replica
+with headroom — rescue or starvation), ``migration_aborts``
+(destination-rejected imports rolled back at the source head), and
+``reach_redirects`` (placements where the admission reach filter
+overrode a reach-blind policy choice).
 """
 
 from __future__ import annotations

@@ -384,6 +384,12 @@ class VirtualMemory:
         while refcounted), so only the unshared tail needs frames — the
         reason a victim whose footprint exceeds the preemptible pool can
         still be restorable.
+
+        ``num_tokens`` may be any page-aligned-or-shorter prefix of the
+        spilled length (a PARTIAL restore): the scheduler re-maps the
+        longest prefix that fits now and re-prefills the evicted tail
+        through the continuation path, so this layer only ever sees a
+        smaller ``num_tokens`` — no partial-mapping state exists here.
         """
         if not shared_prefix_pages:
             return self.map_seq(seq_id, num_tokens)

@@ -26,6 +26,24 @@ Split per the AraOS architecture, one layer per plane:
   prefill only the divergent chunk; the router generalizes fork affinity
   into an additive longest-matching-prefix score when ranking replicas.
 
+  **The portable-swap contract.**  A preempted request's swap record is
+  pure host memory in the pool's storage dtype (int8 pools stay narrow)
+  plus a pinned-prefix provenance carried as a page COUNT — nothing in it
+  references the pool that spilled it.  That makes residency a POLICY
+  decision rather than a property of whichever data plane held the
+  pages: the router migrates a starved or about-to-fail swap victim to
+  any replica whose pinned-prefix-adjusted demand fits
+  (``Scheduler.export_swapped`` / ``import_swapped`` over
+  ``DataPlane.export_swap`` / ``import_swap``, counted as
+  ``restore_migrations``), re-resolving the prefix re-share claim against
+  the destination's own mapping.  When even the migrated victim's
+  unshared tail cannot fit anywhere all at once, the scheduler restores
+  the longest page-aligned prefix that does fit and re-enqueues the
+  request to re-prefill only the evicted tail through the continuation
+  path (``partial_restores`` / ``pages_refilled``) — so the "failed as
+  unreachable" verdict survives only when NO replica could ever host the
+  request.
+
   **The public client API** (:mod:`repro.serve.api`) is the SUPPORTED
   entrypoint: build a validated :class:`ServeConfig` (one flag surface —
   ``ServeConfig.add_args``/``from_args``/``describe``), construct an
@@ -38,9 +56,10 @@ Split per the AraOS architecture, one layer per plane:
   :class:`AsyncDetokenizer` background thread (:mod:`repro.serve.
   detokenize`) so host post-processing overlaps device work; callback
   exceptions surface on ``drain()``.  The internal scheduler-plane
-  :class:`Request` remains public for fake-plane harnesses that drive the
-  Scheduler directly, but submitting it to an Engine/Router is deprecated
-  (one-PR shim).  With ``ServeConfig.aot_buckets`` the Executor
+  :class:`Request` remains public for fake-plane harnesses — they build
+  it and drive ``Scheduler.submit`` directly — but submitting it to an
+  Engine/Router is a hard ``TypeError`` (the one-PR deprecation shim is
+  gone).  With ``ServeConfig.aot_buckets`` the Executor
   pre-compiles bucketed prefill/continuation executables at build time so
   no request pays a first-hit jit stall (``aot_hits``/``aot_misses``/
   ``bucket_pad_tokens``; the open-loop SLO gate in
@@ -55,6 +74,7 @@ from repro.serve.api import (
     ServeRequest,
     ServeResult,
     StreamEvent,
+    to_internal,
 )
 from repro.serve.detokenize import AsyncDetokenizer
 from repro.serve.engine import Engine
@@ -71,6 +91,7 @@ from repro.serve.scheduler import (
     RestoreFailure,
     Scheduler,
     ServeConfig,
+    SwapExport,
 )
 
 __all__ = [
@@ -94,4 +115,6 @@ __all__ = [
     "ServeRequest",
     "ServeResult",
     "StreamEvent",
+    "SwapExport",
+    "to_internal",
 ]

@@ -19,10 +19,11 @@ from the internal policy/data-plane types:
 
 The internal :class:`~repro.serve.scheduler.Request` dataclass remains
 the *scheduler-plane* type (fake data planes, scheduler unit tests build
-it directly); ``Engine.submit`` / ``ReplicaRouter.submit`` still accept
-it through a one-PR deprecation shim, but every client-facing path —
-benchmarks, the launch driver, the SLO harness — speaks
-:class:`ServeRequest`/:class:`ServeResult`.
+it directly and drive ``Scheduler.submit``); passing one to
+``Engine.submit`` / ``ReplicaRouter.submit`` is a hard :class:`TypeError`
+— every client-facing path — benchmarks, the launch driver, the SLO
+harness — speaks :class:`ServeRequest`/:class:`ServeResult` (lowered via
+:func:`to_internal`).
 
 Sampling is engine-global (one PRNG stream, one temperature per fused
 dispatch), so per-request :class:`SamplingParams` are *validated* against

@@ -79,7 +79,6 @@ is call-for-call this engine.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable
 
 import numpy as np
@@ -94,22 +93,23 @@ from repro.serve.scheduler import Request, Scheduler, ServeConfig
 __all__ = ["Engine", "Request", "ServeConfig", "ServeRequest", "ServeResult"]
 
 
-def _coerce(req, next_id: Callable[[], int], cfg: ServeConfig) -> Request:
+def _lower(req: ServeRequest, next_id: Callable[[], int],
+           cfg: ServeConfig) -> Request:
     """Lower a client submission to the scheduler-plane :class:`Request`.
 
-    :class:`~repro.serve.api.ServeRequest` is the supported surface;
-    passing an internal :class:`Request` directly still works for one PR
-    behind a :class:`DeprecationWarning` (the scheduler-plane type remains
-    public for fake-plane harnesses, which drive the Scheduler itself)."""
-    if isinstance(req, ServeRequest):
-        rid = req.req_id if req.req_id is not None else next_id()
-        return to_internal(req, req_id=rid, cfg=cfg)
-    warnings.warn(
-        "submitting repro.serve.scheduler.Request to Engine/ReplicaRouter "
-        "is deprecated — build a repro.serve.api.ServeRequest instead",
-        DeprecationWarning, stacklevel=3,
-    )
-    return req
+    :class:`~repro.serve.api.ServeRequest` is the ONLY accepted public
+    type.  The scheduler-plane :class:`Request` stays public for fake-
+    plane harnesses — which construct it and call ``Scheduler.submit``
+    directly — but submitting one here is a hard :class:`TypeError` (the
+    one-PR deprecation shim is gone)."""
+    if not isinstance(req, ServeRequest):
+        raise TypeError(
+            f"Engine/ReplicaRouter.submit takes a repro.serve.api."
+            f"ServeRequest, got {type(req).__name__}; scheduler-plane "
+            "harnesses submit internal Requests via Scheduler.submit"
+        )
+    rid = req.req_id if req.req_id is not None else next_id()
+    return to_internal(req, req_id=rid, cfg=cfg)
 
 
 class Engine:
@@ -212,11 +212,11 @@ class Engine:
         self._next_req_id += 1
         return rid
 
-    def submit(self, req: ServeRequest | Request) -> int:
-        """Enqueue a :class:`~repro.serve.api.ServeRequest` (the supported
-        client type; an internal ``Request`` is accepted for one PR behind
-        a DeprecationWarning).  Returns the request id."""
-        internal = _coerce(req, self._alloc_req_id, self.cfg)
+    def submit(self, req: ServeRequest) -> int:
+        """Enqueue a :class:`~repro.serve.api.ServeRequest` — the one
+        public client type (anything else is a ``TypeError``).  Returns
+        the request id."""
+        internal = _lower(req, self._alloc_req_id, self.cfg)
         self._next_req_id = max(self._next_req_id, internal.req_id + 1)
         self.scheduler.submit(internal)
         return internal.req_id

@@ -785,18 +785,23 @@ class Executor:
 
         ``shared_pages``: leading frames the scheduler proved are still
         the pinned prefix's (identical bytes, refcount-held) — re-shared
-        by the switcher instead of allocated and scattered."""
-        # the DataPlane protocol passes the scheduler's recorded spill
-        # length; the switcher's own record is authoritative — they must
-        # agree or the re-mapped footprint would silently diverge
-        assert num_tokens == self.switcher.spilled_len(req.req_id), (
-            f"restore of req {req.req_id}: scheduler says {num_tokens} "
-            f"tokens, switcher spilled "
+        by the switcher instead of allocated and scattered.
+
+        ``num_tokens`` may be SHORTER than the spilled length (partial
+        restore): the switcher scatters only the leading page-aligned
+        portion and drops the record's tail, which the scheduler
+        re-prefills through the continuation path."""
+        # the DataPlane protocol passes the scheduler's requested restore
+        # length; the switcher's own record is authoritative — a request
+        # beyond it would silently diverge the re-mapped footprint
+        assert num_tokens <= self.switcher.spilled_len(req.req_id), (
+            f"restore of req {req.req_id}: scheduler asks {num_tokens} "
+            f"tokens, switcher spilled only "
             f"{self.switcher.spilled_len(req.req_id)}"
         )
         k, v, _ = self.switcher.restore_kv(
             req.req_id, self.kv.k_pools, self.kv.v_pools,
-            shared_prefix_pages=shared_pages,
+            shared_prefix_pages=shared_pages, num_tokens=num_tokens,
         )
         self.kv = self.kv._replace(k_pools=k, v_pools=v)
         # the switcher's scatter is layout-oblivious; the pools must come
@@ -807,6 +812,17 @@ class Executor:
     def discard(self, req: Request) -> None:
         """Free a failed request's host-side swap record (never restored)."""
         self.switcher.discard(req.req_id)
+
+    def export_swap(self, req: Request):
+        """Detach the victim's portable swap record (host bytes in the
+        pool storage dtype — int8 stays narrow) so the router can migrate
+        it to another replica's plane."""
+        return self.switcher.export_swap(req.req_id)
+
+    def import_swap(self, req: Request, record) -> None:
+        """Adopt a swap record exported from another replica's plane; the
+        switcher validates the page geometry before anything moves."""
+        self.switcher.import_swap(record)
 
     # ------------------------------------------------------------------
     # sampling

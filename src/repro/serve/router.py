@@ -45,11 +45,35 @@ replica once the load gap exceeds the matched pages.  Placements where
 the prefix score changed the base policy's choice are counted as
 ``prefix_routed``.
 
+**Cross-replica swap migration** (``migrate=True``, the default; inert
+at N=1): swap records are PORTABLE (:class:`~repro.serve.scheduler.
+SwapExport` — host bytes in the pool storage dtype plus the pinned-prefix
+provenance as a page COUNT), so a spilled victim is no longer welded to
+the replica that spilled it.  Once per router step, BEFORE the replicas
+run, the router sweeps each replica's swap-FIFO head and migrates it when
+(a) it is about to be failed as restore-unreachable at the source but
+another replica's pinned-prefix-adjusted demand fits (*rescue* — the
+PR 2 "fail as unreachable" verdict now lands only when NO replica can
+ever host it), or (b) it has sat capacity-blocked for ``migrate_after``
+router steps and another replica can restore it immediately
+(*starvation*).  Fork affinity and pinned-prefix re-sharing are
+re-resolved against the DESTINATION's prefix mapping — a destination
+without the prefix simply restores every page from the record, which is
+self-contained.  An import rejected by the destination plane (raised
+before side effects, per the DataPlane contract) rolls back with a
+front-of-FIFO re-import at the source.  Migration also makes placement
+REACH-AWARE: replicas whose attainable pool can never host a request's
+lifetime demand are filtered out of the candidate set
+(``reach_redirects``), so heterogeneous fleets stop feeding requests to
+replicas that must fail them.
+
 Counters (router-global, in ``router.counters``): ``submitted``,
 ``placements``, ``placements_replica{i}``, ``migrations_declined``,
-``prefix_routed``, ``cross_replica_queue_waits`` (request-steps spent in
-the global queue while every eligible replica was at its backlog bound).
-Each replica's scheduler/executor counters stay per-replica;
+``prefix_routed``, ``restore_migrations``, ``migration_aborts``,
+``reach_redirects``, ``cross_replica_queue_waits`` (request-steps spent
+in the global queue while every eligible replica was at its backlog
+bound).  Each replica's scheduler/executor counters stay per-replica
+(migration adds ``swap_exports``/``swap_imports`` there);
 ``global_counters()`` merges them, and the test-suite invariant is that
 every merged total equals the sum of the per-replica values (no event is
 double- or un-counted by adding replicas).
@@ -124,13 +148,21 @@ class ReplicaRouter:
     def __init__(self, replicas: list[Replica],
                  policy: str = "least_loaded",
                  counters: PerfCounters | None = None,
-                 max_backlog: int | None = None):
+                 max_backlog: int | None = None,
+                 migrate: bool = True, migrate_after: int = 8):
         """``max_backlog``: per-replica queued-request bound; placement
         defers (requests wait in the global queue, counted as
         ``cross_replica_queue_waits``) while every eligible replica is at
         the bound AND at least one replica is still busy.  ``None``
         (default) places immediately — required for exact N=1
-        equivalence with the plain engine."""
+        equivalence with the plain engine.
+
+        ``migrate``: cross-replica swap migration + reach-aware placement
+        (see the module docstring); inert at N=1, so the default ``True``
+        preserves exact single-replica equivalence.  ``migrate_after``:
+        router steps a swap-FIFO head may sit capacity-blocked before a
+        starvation migration is attempted (rescue migrations — victims
+        the source is about to fail — never wait)."""
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         ids = [rep.replica_id for rep in replicas]
@@ -139,14 +171,23 @@ class ReplicaRouter:
         if policy not in self.POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {self.POLICIES}")
+        if migrate_after < 1:
+            raise ValueError(f"migrate_after must be >= 1, "
+                             f"got {migrate_after}")
         self.replicas = list(replicas)
         self.policy = policy
         self.counters = counters or PerfCounters()
         self.max_backlog = max_backlog
+        self.migrate = migrate
+        self.migrate_after = migrate_after
         self.queue: deque[Request] = deque()   # global admission queue
         self.step_i = 0                        # router engine-steps
         self._rr_next = 0
         self._next_req_id = 0
+        #: router steps each swap-FIFO HEAD victim has sat capacity-
+        #: blocked (the starvation clock); entries are pruned the moment
+        #: the victim stops being a blocked head anywhere
+        self._swap_age: dict[int, int] = {}
 
     # ------------------------------------------------------------------
     # queue API
@@ -167,12 +208,13 @@ class ReplicaRouter:
             merged.update(rep.scheduler.done)
         return merged
 
-    def submit(self, req: ServeRequest | Request) -> int:
-        """Enqueue a :class:`~repro.serve.api.ServeRequest` (the supported
-        client type; internal ``Request`` accepted for one PR behind a
-        DeprecationWarning).  Returns the request id."""
-        from repro.serve.engine import _coerce
-        internal = _coerce(
+    def submit(self, req: ServeRequest) -> int:
+        """Enqueue a :class:`~repro.serve.api.ServeRequest` — the one
+        public client type (anything else is a ``TypeError``; scheduler-
+        plane harnesses submit internal ``Request`` objects through
+        ``Scheduler.submit``).  Returns the request id."""
+        from repro.serve.engine import _lower
+        internal = _lower(
             req, self._alloc_req_id, self.replicas[0].scheduler.cfg
         )
         self._next_req_id = max(self._next_req_id, internal.req_id + 1)
@@ -253,10 +295,28 @@ class ReplicaRouter:
         return [rep for rep in reps
                 if len(rep.scheduler.queue) < self.max_backlog]
 
+    def _can_ever_host(self, rep: Replica, req: Request) -> bool:
+        """Whether ``rep``'s attainable pool could EVER run ``req`` mapped
+        to completion — the scheduler's own admission reach check, asked
+        at placement time so a reach-blind policy stops feeding requests
+        to replicas that must fail them."""
+        s = rep.scheduler
+        matched, owner = s.probe_prefix(req)
+        return not s._admission_unreachable(req, matched, owner)
+
     def _place_one(self, req: Request) -> Replica | None:
         """Choose a replica for ``req`` and commit it there, or return
         ``None`` to keep it waiting in the global queue (backlog bound)."""
         elig, constrained = self._eligible(req)
+        if self.migrate and len(self.replicas) > 1:
+            # reach-aware placement: drop replicas that would fail the
+            # request at admission.  If EVERY eligible replica is
+            # unreachable the filter is a no-op — the request then fails
+            # at admission, which is the correct global verdict.
+            reach = [rep for rep in elig if self._can_ever_host(rep, req)]
+            if reach and len(reach) < len(elig):
+                elig = reach
+                self.counters.inc("reach_redirects")
         open_elig = self._backlog_open(elig)
         if not open_elig:
             if any(rep.scheduler.has_work for rep in self.replicas):
@@ -295,11 +355,105 @@ class ReplicaRouter:
             self.queue.popleft()
 
     # ------------------------------------------------------------------
+    # cross-replica swap migration
+    # ------------------------------------------------------------------
+
+    def _resolve_dest_claim(self, rep: Replica, k: int) -> int:
+        """Pinned-prefix pages of ``rep`` a migrated victim with a
+        ``k``-page source claim could re-share (the fleet invariant:
+        preloaded prefixes are identical, so the destination's first
+        ``k`` whole prefix pages hold the same bytes)."""
+        d = rep.scheduler
+        if k and d.vmem.has_seq(d.PREFIX_ID) and \
+                k <= min(len(d.vmem.seq(d.PREFIX_ID).pages),
+                         d.prefix_len // d.cfg.page_size):
+            return k
+        return 0
+
+    def _pick_migration_dest(self, src: Replica, req_id: int,
+                             immediate: bool) -> Replica | None:
+        """Best destination for ``src``'s swapped victim ``req_id``, or
+        ``None``.  The pinned-prefix claim is re-resolved per candidate
+        (fork affinity as a *preference*: prefix holders see a smaller
+        demand, but the record is self-contained so any replica whose
+        attainable pool fits is legal).  ``immediate``: require capacity
+        to restore right now (starvation moves), not merely reachability
+        (rescue moves — the destination may still need to drain/preempt)."""
+        s = src.scheduler
+        num_tokens = s._spilled_tokens[req_id]
+        k = len(s._restorable_shared(req_id))
+        pf = s.vmem.config.pages_for
+        best: tuple[tuple[int, int], Replica] | None = None
+        for rep in self.replicas:
+            if rep is src:
+                continue
+            d = rep.scheduler
+            need = pf(num_tokens) - self._resolve_dest_claim(rep, k)
+            if need > d.attainable_pages():
+                continue
+            if immediate and (need > d.vmem.pool.num_free
+                              or d.vmem.num_free_slots <= 0
+                              or len(d.running) >= d.cfg.max_batch):
+                continue
+            key = (-d.vmem.pool.num_free, d.replica_id)
+            if best is None or key < best[0]:
+                best = (key, rep)
+        return None if best is None else best[1]
+
+    def _migrate_starved(self) -> None:
+        """Once per router step, BEFORE the replicas run: sweep each
+        replica's swap-FIFO head and migrate victims the source is about
+        to fail (rescue) or has starved past ``migrate_after`` blocked
+        steps (starvation).  Head-only, so per-replica swap-FIFO
+        completion order is never reordered by migration."""
+        live: set[int] = set()
+        for src in self.replicas:
+            s = src.scheduler
+            if not s.swapped:
+                continue
+            rid = s.swapped[0]
+            shared = s._restorable_shared(rid)
+            need = (s.vmem.config.pages_for(s._spilled_tokens[rid])
+                    - len(shared))
+            rescue = need > s.attainable_pages()
+            if not rescue and s.can_restore(rid):
+                continue                  # restores at the source this step
+            live.add(rid)
+            age = self._swap_age.get(rid, 0) + 1
+            self._swap_age[rid] = age
+            if not rescue and age < self.migrate_after:
+                continue
+            dest = self._pick_migration_dest(src, rid, immediate=not rescue)
+            if dest is None:
+                continue                  # no host anywhere: verdict stands
+            exp = s.export_swapped(rid)
+            try:
+                dest.scheduler.import_swapped(exp)
+            except Exception:
+                # destination plane rejected the record (raised before any
+                # side effect, per the DataPlane contract): roll back at
+                # the source HEAD so FIFO order is unchanged
+                self.counters.inc("migration_aborts")
+                s.import_swapped(exp, front=True)
+                continue
+            live.discard(rid)
+            self.counters.inc("restore_migrations")
+            self.counters.snapshot(
+                "migrate", (rid, src.replica_id, dest.replica_id))
+        # prune starvation clocks for victims that restored, retired,
+        # migrated or stopped being a blocked head
+        for rid in list(self._swap_age):
+            if rid not in live:
+                del self._swap_age[rid]
+
+    # ------------------------------------------------------------------
     # drive
     # ------------------------------------------------------------------
 
     def step(self) -> None:
         self.step_i += 1
+        if self.migrate and len(self.replicas) > 1:
+            self._migrate_starved()
         self._place_pending()
         if self.queue:
             # request-steps spent waiting in the global queue (every

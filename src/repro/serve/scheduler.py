@@ -97,6 +97,20 @@ class ServeConfig:
     #: horizon is rounded down to a power of two so the jit cache stays
     #: O(log max_horizon) entries.
     max_horizon: int = 8
+    #: partial restore: after this many CONSECUTIVE capacity-blocked
+    #: ``try_restore`` passes at the swap-FIFO head, the scheduler stops
+    #: waiting for an all-or-nothing restore, restores the longest
+    #: page-aligned prefix of the victim that fits the pool right now and
+    #: re-enqueues the request to re-prefill only the evicted tail through
+    #: the continuation path (``partial_restores``/``pages_refilled``).
+    #: 0 disables partial restore (strict all-or-nothing restores).
+    restore_patience: int = 6
+    #: second-chance restore scan: how many victims PAST a
+    #: ``RestoreFailure``-blocked FIFO head one ``try_restore`` pass may
+    #: attempt (mirroring the bounded admission scan), so a head pinned to
+    #: a failing plane cannot starve the rest of the swap queue.  The head
+    #: is never popped out of order.  0 restores strict head-only retry.
+    restore_scan_limit: int = 4
     #: explicit escape hatch (``--no-kernels`` in launch.serve): dispatch
     #: every compute step through a ``use_kernels=False`` twin of the
     #: model — the jnp reference paths.  Never implied by a mesh anymore
@@ -148,6 +162,11 @@ class ServeConfig:
             raise ValueError(
                 f"max_batch ({self.max_batch}) and max_horizon "
                 f"({self.max_horizon}) must be >= 1")
+        if self.restore_patience < 0 or self.restore_scan_limit < 0:
+            raise ValueError(
+                f"restore_patience ({self.restore_patience}) and "
+                f"restore_scan_limit ({self.restore_scan_limit}) must be "
+                ">= 0 (0 disables the mechanism)")
         if self.kv_dtype not in ("native", "int8"):
             raise ValueError(
                 f"kv_dtype must be 'native' or 'int8', got "
@@ -330,6 +349,16 @@ class ReplicaState:
     #: footprint exceeds the preemptible pool can still be reachable.
     spilled_shared: dict[int, list[int]] = dataclasses.field(
         default_factory=dict)
+    #: consecutive capacity-blocked ``try_restore`` passes per FIFO-head
+    #: victim — the patience clock that arms a partial restore
+    restore_blocked: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: partial-restore continuations awaiting re-admission:
+    #: ``req_id -> (kept_tokens, evicted_tail_tokens, cache_reg_or_None)``.
+    #: The request sits in ``queue`` with its kept prefix still MAPPED
+    #: (like the pinned prefix: resident but not running); admission
+    #: re-prefills the tail through ``admit_forked_batch``.
+    partial_resume: dict[int, tuple[int, np.ndarray, Any]] = (
+        dataclasses.field(default_factory=dict))
     step_i: int = 0
     prefix_len: int = 0
 
@@ -339,6 +368,31 @@ class ReplicaState:
         checks: submitted == queued + running + swapped + done)."""
         return (len(self.queue) + len(self.running) + len(self.swapped)
                 + len(self.done))
+
+
+@dataclasses.dataclass
+class SwapExport:
+    """Portable migration record for one spilled request — everything a
+    DESTINATION replica needs to adopt the victim.
+
+    ``record`` is the opaque plane-level swap payload (for the real
+    executor: the switcher's :class:`~repro.core.context_switch.
+    SpilledState`, host bytes in the pool storage dtype — int8 records
+    stay narrow).  ``shared_prefix_pages`` carries the pinned-prefix
+    provenance as a COUNT, not frame ids: source frame ids mean nothing in
+    another pool, so the importer re-resolves the claim against the
+    *destination's* prefix mapping (its first k frames hold the same bytes
+    under the fleet invariant that every preloaded prefix is identical).
+    A destination without a prefix — or with a shorter one — simply
+    shrinks the claim to zero and restores every page from the record,
+    which carries ALL the victim's pages including the formerly-shared
+    leading ones.
+    """
+
+    req: Request
+    num_tokens: int
+    shared_prefix_pages: int
+    record: Any
 
 
 @dataclasses.dataclass
@@ -385,6 +439,19 @@ class DataPlane(Protocol):
     def discard(self, req: Request) -> None:
         """Drop a spilled request's swap record without restoring it (the
         scheduler failed it); frees any host-side page copies."""
+        ...
+
+    def export_swap(self, req: Request) -> Any:
+        """Detach ``req``'s swap record as a portable host-side payload
+        (cross-replica migration source side).  After this the plane holds
+        NOTHING for the request — the record rides the
+        :class:`SwapExport`."""
+        ...
+
+    def import_swap(self, req: Request, record: Any) -> None:
+        """Adopt a swap record exported from another replica's plane
+        (migration destination side).  Must raise BEFORE any side effect
+        on rejection, so the router can re-import at the source."""
         ...
 
     def admit_forked_batch(
@@ -438,6 +505,13 @@ class HostOnlyPlane:
 
     def discard(self, req: Request) -> None:
         self.events.append(("discard", req.req_id))
+
+    def export_swap(self, req: Request):
+        self.events.append(("export_swap", req.req_id))
+        return ("swap_record", req.req_id)
+
+    def import_swap(self, req: Request, record) -> None:
+        self.events.append(("import_swap", req.req_id))
 
     def admit_forked_batch(self, reqs, start_lens, tail_copies):
         self.events.append(
@@ -741,6 +815,23 @@ class Scheduler:
         return (self.vmem.pool.num_free >= need
                 and self.vmem.num_free_slots > 0)
 
+    def _commit_restore(self, req_id: int, req: Request,
+                        shared: list[int]) -> None:
+        """Shared tail of every successful full restore (the caller has
+        already removed ``req_id`` from the ``swapped`` deque)."""
+        del self._swap_requests[req_id]
+        del self._spilled_tokens[req_id]
+        self.state.spilled_shared.pop(req_id, None)
+        self.state.restore_blocked.pop(req_id, None)
+        if shared:
+            self.counters.inc("shared_restores")
+            self.counters.inc("pages_reused", len(shared))
+        req.status = "running"
+        self.running[req_id] = req
+        self.slot_of[req_id] = self.vmem.seq(req_id).slot
+        self.counters.inc("restores")
+        self.counters.snapshot("restore", req_id)
+
     def try_restore(self) -> list[Request]:
         restored: list[Request] = []
         for _ in range(len(self.swapped)):
@@ -752,7 +843,9 @@ class Scheduler:
             # that remainder can never fit is the victim truly
             # unreachable — otherwise the FIFO head would block the swap
             # queue until ``run(max_steps)`` expires (the ROADMAP
-            # livelock) — fail it then, and only then.
+            # livelock) — fail it then, and only then.  (Under a router
+            # the migration sweep runs FIRST, so this verdict only lands
+            # when no replica can host the adjusted demand.)
             shared = self._restorable_shared(req_id)
             need = (self.vmem.config.pages_for(self._spilled_tokens[req_id])
                     - len(shared))
@@ -760,6 +853,7 @@ class Scheduler:
                 self.swapped.popleft()
                 self._spilled_tokens.pop(req_id)
                 self.state.spilled_shared.pop(req_id, None)
+                self.state.restore_blocked.pop(req_id, None)
                 req = self._swap_requests.pop(req_id)
                 self.plane.discard(req)    # free the host-side swap record
                 self._fail(req, "restore")
@@ -767,6 +861,19 @@ class Scheduler:
             if len(self.running) >= self.cfg.max_batch:
                 break
             if not self.can_restore(req_id):
+                # Capacity-blocked head: strict FIFO wait, but after
+                # ``restore_patience`` consecutive blocked passes stop
+                # waiting for the all-or-nothing restore and bring back
+                # the longest page-aligned prefix that fits RIGHT NOW
+                # (the evicted tail re-prefills through the continuation
+                # path once admission finds it pages — with preemption
+                # power a restore never has).
+                blocked = self.state.restore_blocked.get(req_id, 0) + 1
+                self.state.restore_blocked[req_id] = blocked
+                if (self.cfg.restore_patience > 0
+                        and blocked >= self.cfg.restore_patience
+                        and self._try_partial_restore(req_id, shared)):
+                    continue
                 break
             req = self._swap_requests[req_id]
             try:
@@ -775,24 +882,180 @@ class Scheduler:
             except RestoreFailure:
                 # Transient data-plane failure, raised before any side
                 # effect (the RestoreFailure contract): leave the victim
-                # at the FIFO head and retry on a later step.
+                # at the FIFO head and retry on a later step — but give
+                # the victims queued BEHIND it a bounded second chance,
+                # or a head pinned to a failing plane starves the queue.
                 self.counters.inc("restore_failures")
                 self.counters.snapshot("restore_failure", req_id)
+                self._second_chance_scan(restored)
                 break
             self.swapped.popleft()
-            del self._swap_requests[req_id]
-            del self._spilled_tokens[req_id]
-            self.state.spilled_shared.pop(req_id, None)
-            if shared:
-                self.counters.inc("shared_restores")
-                self.counters.inc("pages_reused", len(shared))
-            req.status = "running"
-            self.running[req_id] = req
-            self.slot_of[req_id] = self.vmem.seq(req_id).slot
-            self.counters.inc("restores")
-            self.counters.snapshot("restore", req_id)
+            self._commit_restore(req_id, req, shared)
             restored.append(req)
         return restored
+
+    def _second_chance_scan(self, restored: list[Request]) -> None:
+        """Bounded scan past a ``RestoreFailure``-blocked FIFO head
+        (mirroring the admission scan's bounded look-ahead): fully restore
+        up to ``restore_scan_limit`` later victims that fit, WITHOUT
+        popping the head — it keeps its FIFO position and retries first on
+        the next pass, so completion-order guarantees never invert, the
+        queue just stops starving behind one pinned victim."""
+        scanned = 0
+        i = 1
+        while i < len(self.swapped) and scanned < self.cfg.restore_scan_limit:
+            if len(self.running) >= self.cfg.max_batch:
+                break
+            req_id = self.swapped[i]
+            scanned += 1
+            if not self.can_restore(req_id):
+                i += 1
+                continue
+            shared = self._restorable_shared(req_id)
+            req = self._swap_requests[req_id]
+            try:
+                self.plane.restore(req, self._spilled_tokens[req_id],
+                                   shared_pages=shared or None)
+            except RestoreFailure:
+                self.counters.inc("restore_failures")
+                self.counters.snapshot("restore_failure", req_id)
+                i += 1
+                continue
+            del self.swapped[i]
+            self._commit_restore(req_id, req, shared)
+            self.counters.inc("second_chance_restores")
+            restored.append(req)
+
+    def _try_partial_restore(self, req_id: int, shared: list[int]) -> bool:
+        """Restore the longest page-aligned prefix of the FIFO-head victim
+        that fits the pool now (re-sharing ``shared`` pinned frames),
+        consume its swap record, and re-enqueue the request at the queue
+        FRONT as a partial-resume continuation — admission re-prefills the
+        evicted tail through ``admit_forked_batch`` (causal KV is a pure
+        function of the token prefix, so the recompute is exact) and drops
+        the recomputed chunk's sampled token, which the stream already
+        carries.  Returns False (leaving full-restore waiting in place)
+        whenever the tail is not host-reconstructable or nothing useful
+        fits."""
+        if (self.state.partial_resume      # one outstanding continuation:
+                # stacked kept-but-idle mappings could exhaust the pool
+                # with nothing running (hence nothing preemptible)
+                or self.vmem.num_free_slots <= 0
+                or len(self.running) >= self.cfg.max_batch
+                or np.ndim(self._swap_requests[req_id].prompt) != 1):
+            return False
+        page = self.cfg.page_size
+        req = self._swap_requests[req_id]
+        spilled = self._spilled_tokens[req_id]
+        total_pages = self.vmem.config.pages_for(spilled)
+        keep_pages = min(len(shared) + self.vmem.pool.num_free,
+                         total_pages - 1)
+        keep = keep_pages * page
+        base = req.prefix_len
+        # the tail must be reconstructable from prompt+output alone —
+        # positions below prefix_len belong to the (fork/radix) parent
+        if (keep_pages < 1 or keep_pages < len(shared) or keep < base
+                or keep >= spilled):
+            return False
+        try:
+            stream = np.concatenate([
+                np.asarray(req.prompt, np.int32).reshape(-1),
+                np.asarray([int(np.asarray(t)) for t in req.output],
+                           np.int32),
+            ])
+        except (TypeError, ValueError, OverflowError):
+            return False
+        if spilled - base > len(stream):
+            return False
+        tail = stream[keep - base: spilled - base]
+        if tail.size == 0:
+            return False
+        try:
+            self.plane.restore(req, keep, shared_pages=shared or None)
+        except RestoreFailure:
+            self.counters.inc("restore_failures")
+            self.counters.snapshot("restore_failure", req_id)
+            return False
+        # full committed content, for re-registering the restored run
+        # with the radix cache at resume time (best effort: a fork's
+        # leading positions come from the registered prefix tokens)
+        reg = None
+        if self.prefix_cache is not None:
+            if base == 0:
+                reg = stream[:spilled]
+            else:
+                pre = self.prefix_cache.tokens_of(self.PREFIX_ID)
+                if (req.share_prefix and pre is not None
+                        and np.ndim(pre) == 1 and len(pre) >= base):
+                    reg = np.concatenate(
+                        [np.asarray(pre, np.int32)[:base], stream]
+                    )[:spilled]
+        self.swapped.popleft()
+        del self._swap_requests[req_id]
+        del self._spilled_tokens[req_id]
+        self.state.spilled_shared.pop(req_id, None)
+        self.state.restore_blocked.pop(req_id, None)
+        if shared:
+            self.counters.inc("shared_restores")
+            self.counters.inc("pages_reused", len(shared))
+        req.status = "queued"
+        self.state.partial_resume[req_id] = (keep, tail, reg)
+        self.queue.appendleft(req)     # keeps the victim's FIFO priority
+        self.counters.inc("partial_restores")
+        self.counters.snapshot("partial_restore", (req_id, keep))
+        return True
+
+    # ------------------------------------------------------------------
+    # cross-replica swap migration (router-driven)
+    # ------------------------------------------------------------------
+
+    def export_swapped(self, req_id: int) -> SwapExport:
+        """Detach a spilled victim for migration to another replica: pops
+        every piece of swap bookkeeping AND the plane's swap record, so
+        this replica keeps no reference (the satellite leak audit's
+        migration-source path).  The pinned-prefix provenance travels as a
+        page COUNT — the destination re-resolves it against its own prefix
+        mapping (:meth:`import_swapped`)."""
+        if req_id not in self._swap_requests:
+            raise KeyError(f"req {req_id} is not swapped on replica "
+                           f"{self.replica_id}")
+        self.swapped.remove(req_id)
+        req = self._swap_requests.pop(req_id)
+        num_tokens = self._spilled_tokens.pop(req_id)
+        k = len(self.state.spilled_shared.pop(req_id, []) or [])
+        self.state.restore_blocked.pop(req_id, None)
+        record = self.plane.export_swap(req)
+        self.counters.inc("swap_exports")
+        return SwapExport(req=req, num_tokens=num_tokens,
+                          shared_prefix_pages=k, record=record)
+
+    def import_swapped(self, exp: SwapExport, front: bool = False) -> None:
+        """Adopt a migrated victim: hand the plane its swap record (which
+        must raise BEFORE side effects on rejection — the router then
+        re-imports at the source) and re-resolve the pinned-prefix claim
+        against THIS replica's prefix: its first k whole pages hold the
+        same bytes as the source prefix's under the fleet invariant that
+        preloaded prefixes are identical; a missing/shorter prefix just
+        shrinks the claim and the restore moves those pages from the
+        record instead.  ``front=True`` preserves FIFO priority (rollback
+        re-imports at the source head)."""
+        rid = exp.req.req_id
+        self.plane.import_swap(exp.req, exp.record)   # may raise: no-op then
+        exp.req.status = "swapped"
+        if front:
+            self.swapped.appendleft(rid)
+        else:
+            self.swapped.append(rid)
+        self._swap_requests[rid] = exp.req
+        self._spilled_tokens[rid] = exp.num_tokens
+        shared: list[int] = []
+        k = exp.shared_prefix_pages
+        if k and self.vmem.has_seq(self.PREFIX_ID):
+            pre = self.vmem.seq(self.PREFIX_ID).pages
+            if k <= min(len(pre), self.prefix_len // self.cfg.page_size):
+                shared = [int(p) for p in pre[:k]]
+        self.state.spilled_shared[rid] = shared
+        self.counters.inc("swap_imports")
 
     # ------------------------------------------------------------------
     # preemption (context-switch policy)
@@ -895,12 +1158,33 @@ class Scheduler:
         batched data-plane call per step (``admit_forked_batch``)."""
         admitted: list[Request] = []
         pending: list[
-            tuple[Request, int, tuple[int, int] | None, Any]] = []
+            tuple[Request, int, tuple[int, int] | None, Any,
+                  Request | None]] = []
         while self.queue and (
             len(self.running) + len(admitted) + len(pending)
             < self.cfg.max_batch
         ):
             req = self.queue[0]
+            if req.req_id in self.state.partial_resume:
+                # partial-restore continuation: the kept prefix is already
+                # mapped; only the evicted tail needs frames — and HERE the
+                # request holds preemption power an in-place restore never
+                # had (the whole point of re-enqueueing it).  No reach
+                # check: the tail demand is strictly below the admission
+                # demand that already passed.
+                keep, tail, _ = self.state.partial_resume[req.req_id]
+                need = (self.vmem.config.pages_for(keep + len(tail))
+                        - len(self.vmem.seq(req.req_id).pages))
+                if need > self.vmem.pool.num_free:
+                    self._flush_forked(pending)
+                    if not self.preempt_for(need, protect=req.req_id):
+                        break              # retried at the head next step
+                entry = self._resume_bookkeeping(req)
+                if entry is None:
+                    break
+                pending.append(entry)
+                self.queue.popleft()
+                continue
             matched, owner = self.probe_prefix(req)
             if self._admission_unreachable(req, matched, owner):
                 self.queue.popleft()
@@ -945,9 +1229,33 @@ class Scheduler:
         self._flush_forked(pending)
         return admitted
 
+    def _resume_bookkeeping(
+        self, req: Request
+    ) -> tuple[Request, int, tuple[int, int] | None, Any, Request] | None:
+        """Map the evicted tail of a partial-restore continuation and build
+        its pending entry.  The plane prefills a SHADOW request (the tail
+        as prompt, the kept length as prefix) so the real request's
+        prompt/output — and therefore ``total_len`` and the committed
+        stream — stay untouched; ``_flush_forked`` discards the shadow's
+        sampled token, which position arithmetic shows is exactly the last
+        committed ``output`` entry (logits at position spilled-1 sample
+        position spilled)."""
+        keep, tail, reg = self.state.partial_resume[req.req_id]
+        try:
+            faults = self.vmem.append_tokens(req.req_id, int(len(tail)))
+        except OutOfPagesError:
+            return None                    # entry stays; retried next step
+        del self.state.partial_resume[req.req_id]
+        self.counters.inc("pages_refilled", len(faults))
+        shadow = dataclasses.replace(
+            req, prompt=np.asarray(tail, np.int32), prefix_len=keep,
+            output=[], stream_callback=None)
+        return (shadow, keep, None, reg, req)
+
     def _fork_bookkeeping(
         self, req: Request
-    ) -> tuple[Request, int, tuple[int, int] | None, Any] | None:
+    ) -> tuple[Request, int, tuple[int, int] | None, Any,
+               Request | None] | None:
         """Fork the resident prefix's page table for ``req`` (host state
         only — the data-plane call is deferred to ``_flush_forked``)."""
         page = self.cfg.page_size
@@ -980,11 +1288,12 @@ class Scheduler:
                         [np.asarray(pre)[:self.prefix_len], req.prompt])
                 except ValueError:
                     reg = None
-        return (req, self.prefix_len, tail_copy, reg)
+        return (req, self.prefix_len, tail_copy, reg, None)
 
     def _radix_bookkeeping(
         self, req: Request, matched: int, owner: int
-    ) -> tuple[Request, int, tuple[int, int] | None, Any] | None:
+    ) -> tuple[Request, int, tuple[int, int] | None, Any,
+               Request | None] | None:
         """COW-map the radix-matched whole pages of ``owner`` for ``req``
         (host state only — the continuation prefill is deferred to
         ``_flush_forked``).  ``req.prompt`` is sliced to the unmatched
@@ -1012,18 +1321,26 @@ class Scheduler:
         self.counters.inc("pages_reused", matched // self.cfg.page_size)
         self.counters.inc("prefill_tokens_skipped", matched)
         self.counters.snapshot("prefix_hit", (req.req_id, matched))
-        return (req, matched, None, full)
+        return (req, matched, None, full, None)
 
     def _flush_forked(
         self,
-        pending: list[tuple[Request, int, tuple[int, int] | None, Any]],
+        pending: list[tuple[Request, int, tuple[int, int] | None, Any,
+                            Request | None]],
     ) -> None:
-        """Run all pending forked/radix-hit admissions as ONE batched
-        continuation prefill and commit them to ``running`` (request
-        order).  Each entry's registration tokens (the request's full
-        committed content) enter the radix cache only HERE — after the
-        plane call wrote the chunk's KV — so a same-step admission can
-        never match pages whose KV is not yet committed."""
+        """Run all pending forked/radix-hit admissions — and partial-
+        restore continuations — as ONE batched continuation prefill and
+        commit them to ``running`` (request order).  Each entry's
+        registration tokens (the request's full committed content) enter
+        the radix cache only HERE — after the plane call wrote the chunk's
+        KV — so a same-step admission can never match pages whose KV is
+        not yet committed.
+
+        Resume entries (5th element set) prefilled a SHADOW request: the
+        REAL request goes running with its stream untouched, and the
+        shadow's sampled token is dropped — the recomputed chunk ends at
+        position ``spilled-1``, whose logits sample position ``spilled``,
+        a token the stream committed before the spill."""
         if not pending:
             return
         reqs = [e[0] for e in pending]
@@ -1031,16 +1348,21 @@ class Scheduler:
             reqs, [e[1] for e in pending], [e[2] for e in pending]
         )
         now = time.perf_counter()
-        for (req, start_len, _, reg), first in zip(pending, firsts):
+        for (req, start_len, _, reg, orig), first in zip(pending, firsts):
+            if orig is not None:
+                req = orig                  # commit the REAL request;
+                                            # `first` is discarded (above)
+            else:
+                req.prefix_len = start_len
+                req.output.append(first)
             req.status = "running"
-            req.prefix_len = start_len
-            req.output.append(first)
             self.running[req.req_id] = req
             self.slot_of[req.req_id] = self.vmem.seq(req.req_id).slot
             if reg is not None and self.prefix_cache is not None:
                 self.prefix_cache.register(req.req_id, reg)
             self._stamp_commit(req, now)
-            self._emit(req, req.output[-1], final=False)
+            if orig is None:
+                self._emit(req, req.output[-1], final=False)
         self.counters.inc("fork_batches")
         pending.clear()
 

@@ -28,6 +28,13 @@ that ``Scheduler.step_plane`` drives — plus a scripted fault schedule:
       Submit ``request`` to the attached scheduler at ``step`` (scripted
       late arrivals; the router harness submits through the router
       instead).
+  ``("reject_import", step, req_id, times)``
+      Arm the plane to reject the next ``times`` ``import_swap`` attempts
+      for ``req_id`` from ``step`` on (raised BEFORE any side effect, per
+      the DataPlane contract — the router must roll the migration back at
+      the source).  Composed with ``hog`` on a destination plane this
+      also models "destination fills mid-import": the import lands but
+      the restore stays capacity-blocked there.
 
 **Token determinism is the harness's core trick**: every sampled token is
 ``token_for(req_id, output_index)`` — a pure function of the request
@@ -89,7 +96,16 @@ class FaultyDataPlane:
         self._fired = [False] * len(self._schedule)
         self._hogs: list[tuple[int, list[int]]] = []   # (release_at, pages)
         self._deny_restore: dict[int, int] = {}        # req_id -> times left
+        self._deny_import: dict[int, int] = {}         # req_id -> times left
+        self._exported: set[int] = set()   # rollback imports never rejected
         self._spilled_len: dict[int, int] = {}
+
+    @property
+    def swapped_out(self) -> list[int]:
+        """Requests whose swap records this plane still holds — mirrors
+        ``ContextSwitcher.swapped_out`` for the leak-audit tests (must be
+        empty at engine drain)."""
+        return sorted(self._spilled_len)
 
     def attach(self, sched: Scheduler) -> None:
         """Bind the scheduler whose slots/outputs parametrize the token
@@ -151,6 +167,11 @@ class FaultyDataPlane:
                 )
                 self.sched.spill(self.sched.running[req_id])
                 self.events.append(("delay_done", req_id))
+        elif kind == "reject_import":
+            _, _, req_id, times = ev
+            self._deny_import[req_id] = (
+                self._deny_import.get(req_id, 0) + times
+            )
         elif kind == "submit":
             _, _, req = ev
             self.sched.submit(req)
@@ -186,13 +207,41 @@ class FaultyDataPlane:
             self._deny_restore[req.req_id] -= 1
             self.events.append(("restore_failed", req.req_id))
             raise RestoreFailure(f"injected restore failure: {req.req_id}")
-        assert num_tokens == self._spilled_len.pop(req.req_id)
+        # partial restores legally re-map a page-aligned prefix of the
+        # spilled length; the record is CONSUMED either way (no tail leak)
+        assert num_tokens <= self._spilled_len.pop(req.req_id)
         self.events.append(("restore", req.req_id))
         self.vmem.restore_seq(req.req_id, num_tokens, shared_pages)
 
     def discard(self, req: Request) -> None:
         self.events.append(("discard", req.req_id))
         self._spilled_len.pop(req.req_id, None)
+
+    def export_swap(self, req: Request):
+        """Detach the swap record for migration — after this the plane
+        holds nothing for ``req`` (asserted by the leak-audit tests)."""
+        self.events.append(("export_swap", req.req_id))
+        self._exported.add(req.req_id)
+        return ("swap_record", req.req_id,
+                self._spilled_len.pop(req.req_id))
+
+    def import_swap(self, req: Request, record) -> None:
+        """Adopt a migrated record; injected rejections raise BEFORE any
+        side effect (the contract the router's rollback relies on).
+        Re-imports of a record THIS plane just exported (the router's
+        rollback after a destination rejection) are never rejected —
+        re-attaching what the source detached moments ago cannot fail,
+        only the destination's adoption gate can."""
+        rollback = req.req_id in self._exported
+        if not rollback and self._deny_import.get(req.req_id, 0) > 0:
+            self._deny_import[req.req_id] -= 1
+            self.events.append(("import_rejected", req.req_id))
+            raise RuntimeError(f"injected import rejection: {req.req_id}")
+        kind, rid, spilled_len = record
+        assert kind == "swap_record" and rid == req.req_id
+        self._exported.discard(rid)
+        self.events.append(("import_swap", req.req_id))
+        self._spilled_len[req.req_id] = spilled_len
 
     def admit_forked_batch(self, reqs, start_lens, tail_copies):
         self._sync()
@@ -249,11 +298,15 @@ class FaultyDataPlane:
 
 def make_replica(page_size=4, usable_pages=15, max_pages=8, max_batch=3,
                  max_horizon=8, schedule=(), replica_id=0,
-                 prefix_cache=True):
-    """A Scheduler wired to a FaultyDataPlane over a fresh vmem."""
+                 prefix_cache=True, **cfg_kw):
+    """A Scheduler wired to a FaultyDataPlane over a fresh vmem.
+
+    Extra keyword arguments pass through to :class:`ServeConfig`
+    (e.g. ``restore_patience`` / ``restore_scan_limit``)."""
     cfg = ServeConfig(page_size=page_size, num_pages=usable_pages + 1,
                       max_pages_per_seq=max_pages, max_batch=max_batch,
-                      max_horizon=max_horizon, prefix_cache=prefix_cache)
+                      max_horizon=max_horizon, prefix_cache=prefix_cache,
+                      **cfg_kw)
     vmem = VirtualMemory(VMemConfig(
         page_size=page_size, num_pages=usable_pages,
         max_pages_per_seq=max_pages, max_seqs=max_batch,

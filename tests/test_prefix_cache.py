@@ -41,7 +41,13 @@ from _fault_plane import (
     expected_output,
     make_replica,
 )
-from repro.serve import Replica, ReplicaRouter, Request
+from repro.serve import (
+    Replica,
+    ReplicaRouter,
+    Request,
+    ServeRequest,
+    to_internal,
+)
 
 pytestmark = pytest.mark.prefix
 
@@ -72,7 +78,7 @@ def radix_workload(seed: int):
         keep = int(rng.integers(0, len(base) // PS + 1)) * PS
         tail = rng.integers(0, VOCAB, size=int(rng.integers(1, 6))) \
             .astype(np.int32)
-        submits.append((int(rng.integers(1, 20)), Request(
+        submits.append((int(rng.integers(1, 20)), ServeRequest(
             req_id=i, prompt=np.concatenate([base[:keep], tail]),
             max_new_tokens=int(rng.integers(2, 7)),
         )))
@@ -110,7 +116,8 @@ class TestTokenIdentityVsCold:
         frame, and skipped tokens are always whole-page multiples."""
         sched, plane = make_replica(page_size=PS)
         for s, r in sorted(radix_workload(seed), key=lambda e: e[0]):
-            plane._schedule = plane._schedule + [("submit", s, r)]
+            plane._schedule = plane._schedule + \
+                [("submit", s, to_internal(r))]
             plane._fired.append(False)
         drive(sched, plane)
         c = sched.counters
@@ -131,7 +138,8 @@ class TestEviction:
         sched, plane = make_replica(page_size=PS)
         submits = [(s, copy.deepcopy(r)) for s, r in radix_workload(seed)]
         for s, r in sorted(submits, key=lambda e: e[0]):
-            plane._schedule = plane._schedule + [("submit", s, r)]
+            plane._schedule = plane._schedule + \
+                [("submit", s, to_internal(r))]
             plane._fired.append(False)
         steps = drive(sched, plane)
         assert steps < 500 and not sched.has_work
@@ -177,10 +185,10 @@ class TestPrefixAwareRouting:
         the pinned prefix pages); the prefix score must flip the choice
         to replica 0 and count it."""
         router, planes = self._router_with_prefix_on_replica0()
-        r = Request(req_id=0,
-                    prompt=np.concatenate([
-                        self.PREFIX, np.arange(40, 44, dtype=np.int32)]),
-                    max_new_tokens=3)
+        r = ServeRequest(req_id=0,
+                         prompt=np.concatenate([
+                             self.PREFIX, np.arange(40, 44, dtype=np.int32)]),
+                         max_new_tokens=3)
         router.submit(r)
         assert drive_router(router, planes) < 500
         assert router.counters.get("placements_replica0") == 1
@@ -193,9 +201,9 @@ class TestPrefixAwareRouting:
 
     def test_non_matching_admission_stays_prefix_blind(self):
         router, planes = self._router_with_prefix_on_replica0()
-        router.submit(Request(req_id=0,
-                              prompt=np.arange(40, 50, dtype=np.int32),
-                              max_new_tokens=3))
+        router.submit(ServeRequest(req_id=0,
+                                   prompt=np.arange(40, 50, dtype=np.int32),
+                                   max_new_tokens=3))
         assert drive_router(router, planes) < 500
         # least loaded: replica 1 (no pinned pages) — score added nothing
         assert router.counters.get("placements_replica1") == 1
@@ -208,14 +216,14 @@ class TestPrefixAwareRouting:
         the additive score must not reopen the constraint."""
         router, planes = self._router_with_prefix_on_replica0()
         # load replica 0 well above replica 1 first
-        filler = Request(req_id=0,
-                         prompt=np.concatenate([
-                             self.PREFIX,
-                             np.arange(60, 64, dtype=np.int32)]),
-                         max_new_tokens=8)
-        fork = Request(req_id=1,
-                       prompt=np.arange(70, 76, dtype=np.int32),
-                       max_new_tokens=3, share_prefix=True)
+        filler = ServeRequest(req_id=0,
+                              prompt=np.concatenate([
+                                  self.PREFIX,
+                                  np.arange(60, 64, dtype=np.int32)]),
+                              max_new_tokens=8)
+        fork = ServeRequest(req_id=1,
+                            prompt=np.arange(70, 76, dtype=np.int32),
+                            max_new_tokens=3, share_prefix=True)
         router.submit(filler)
         router.submit(fork)
         assert drive_router(router, planes) < 500
@@ -261,7 +269,7 @@ class TestTemperatureStreamIdentity:
             # single-request admissions: one sample call per admission on
             # both paths keeps the split sequence aligned per request
             for i, tail in enumerate(tails):
-                eng.submit(Request(
+                eng.submit(ServeRequest(
                     req_id=i, prompt=np.concatenate([prefix, tail]),
                     max_new_tokens=6))
                 done = eng.run()

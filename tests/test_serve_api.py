@@ -189,12 +189,17 @@ class TestTypedSubmitDrain:
         assert router.submit(sreq(req_id=5)) == 5
         assert router.submit(sreq()) == 6      # allocator skipped past 5
 
-    def test_internal_request_deprecated_but_works(self):
+    def test_internal_request_is_a_hard_type_error(self):
+        """The one-PR deprecation shim is gone: Engine/Router.submit take
+        ONLY ServeRequest; scheduler-plane harnesses keep the internal
+        type via Scheduler.submit (exercised right after the rejection)."""
         router, _ = make_router()
         internal = Request(req_id=0, prompt=np.arange(1, 6, dtype=np.int32),
                            max_new_tokens=4)
-        with pytest.warns(DeprecationWarning, match="ServeRequest"):
+        with pytest.raises(TypeError, match="ServeRequest"):
             router.submit(internal)
+        # the scheduler-plane door stays open for harnesses
+        router.replicas[0].scheduler.submit(internal)
         results = router.drain()
         assert list(results[0].tokens) == expected_output(internal)
 

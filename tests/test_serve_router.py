@@ -31,14 +31,16 @@ from _fault_plane import (
     expected_output,
     make_replica,
 )
-from repro.serve import Replica, ReplicaRouter, Request, ServeRequest
+from repro.serve import Replica, ReplicaRouter, ServeRequest, to_internal
 
 pytestmark = pytest.mark.router
 
 
 def req(i, plen=6, max_new=8, **kw):
-    return Request(req_id=i, prompt=np.arange(plen, dtype=np.int32),
-                   max_new_tokens=max_new, **kw)
+    """Public-surface submission (Engine/Router take ONLY ServeRequest);
+    scheduler-plane sites lower it explicitly via ``to_internal``."""
+    return ServeRequest(req_id=i, prompt=np.arange(plen, dtype=np.int32),
+                        max_new_tokens=max_new, **kw)
 
 
 def make_router(n, policy="least_loaded", schedules=None, max_backlog=None,
@@ -189,7 +191,7 @@ class TestCounterInvariants:
                       ("hog", 8, 2, 3)),
         )
         for i in range(4):
-            sched.submit(req(i, plen=6, max_new=8))
+            sched.submit(to_internal(req(i, plen=6, max_new=8)))
         last = {k: 0 for k in WATCHED}
         steps = 0
         while sched.has_work and steps < 300:
@@ -299,7 +301,7 @@ class TestPlacement:
         preload_fake_prefix(router.replicas[1], plen=6)
         # replica 0: prefix (2 pages) + a queued request -> at backlog AND
         # still the overall least-loaded is replica 2 (no prefix, empty)
-        router.replicas[0].scheduler.submit(req(90, plen=2))
+        router.replicas[0].scheduler.submit(to_internal(req(90, plen=2)))
         router.submit(req(0, plen=4, share_prefix=True))
         # eligible = {0, 1}; 0 is backlog-full -> choice = 1.  The
         # affinity-free baseline under the same backlog filter is
@@ -360,7 +362,7 @@ class TestN1Equivalence:
         reqs = [req(i, plen=5 + i, max_new=6) for i in range(4)]
         sched, plane = make_replica(usable_pages=8, max_batch=2)
         for r in reqs:
-            sched.submit(copy.deepcopy(r))
+            sched.submit(to_internal(copy.deepcopy(r)))
         drive(sched, plane)
         router, planes = make_router(1, usable_pages=8, max_batch=2)
         for r in reqs:
@@ -494,7 +496,7 @@ class TestRouterRealShardedExecutors(TestRouterRealEngines):
 class TestRunBudgetBoundary:
     def _probe(self, max_horizon):
         sched, plane = make_replica(max_horizon=max_horizon)
-        sched.submit(req(0, plen=6, max_new=5))
+        sched.submit(to_internal(req(0, plen=6, max_new=5)))
         clocks = [0]
         while sched.has_work and sched.step_i < 100:
             plane.tick(len(clocks))
@@ -513,7 +515,7 @@ class TestRunBudgetBoundary:
         clocks = self._probe(max_horizon)
         final, before_final = clocks[-1], clocks[-2]
         sched, plane = make_replica(max_horizon=max_horizon)
-        sched.submit(req(0, plen=6, max_new=5))
+        sched.submit(to_internal(req(0, plen=6, max_new=5)))
         # Engine.run loop verbatim: budget that admits the final step
         while sched.has_work and sched.step_i < before_final + 1:
             sched.step_plane()
@@ -522,7 +524,7 @@ class TestRunBudgetBoundary:
         assert sched.step_i == final
         # one tick less: the final step must NOT have run
         sched2, plane2 = make_replica(max_horizon=max_horizon)
-        sched2.submit(req(0, plen=6, max_new=5))
+        sched2.submit(to_internal(req(0, plen=6, max_new=5)))
         while sched2.has_work and sched2.step_i < before_final:
             sched2.step_plane()
         assert 0 not in sched2.done and sched2.has_work

@@ -405,11 +405,11 @@ class TestRestoreFailureHandling:
     scheduler must retry from the unchanged swap-queue head — never crash,
     drop the victim, or reorder the FIFO."""
 
-    def _replica(self, schedule, usable_pages=4, max_batch=2):
+    def _replica(self, schedule, usable_pages=4, max_batch=2, **cfg_kw):
         from _fault_plane import make_replica
         return make_replica(page_size=4, usable_pages=usable_pages,
                             max_pages=8, max_batch=max_batch,
-                            max_horizon=1, schedule=schedule)
+                            max_horizon=1, schedule=schedule, **cfg_kw)
 
     def test_transient_failure_is_retried_until_it_clears(self):
         from _fault_plane import drive, expected_output
@@ -428,7 +428,12 @@ class TestRestoreFailureHandling:
         assert plane.events.count(("restore_failed", 0)) == 2
         sched.vmem.check_invariants()
 
-    def test_failed_head_blocks_but_never_reorders_the_fifo(self):
+    def test_failing_head_stays_at_front_while_second_chance_rescues(self):
+        """A transiently failing FIFO head no longer starves the victims
+        behind it: the bounded second-chance scan restores rid 1 DURING
+        rid 0's outage, while rid 0 keeps the head position and restores
+        the moment its failure clears — completions never reorder the
+        FIFO head out of turn."""
         from _fault_plane import drive
         sched, plane = self._replica(
             (("force_spill", 2, 0), ("force_spill", 2, 1),
@@ -440,9 +445,31 @@ class TestRestoreFailureHandling:
         steps = drive(sched, plane, max_steps=200)
         assert steps < 200 and not sched.has_work
         assert sched.counters.get("restore_failures") == 3
+        # rid 1 came back through the scan while the head was failing...
+        restores = [e for e in plane.events if e[0] == "restore"]
+        assert restores[0] == ("restore", 1)
+        assert sched.counters.get("second_chance_restores") >= 1
+        # ...and the head was never dropped: rid 0 restored right after
+        assert ("restore", 0) in restores
+        assert all(r.status == "done" for r in sched.done.values())
+        sched.vmem.check_invariants()
+
+    def test_scan_disabled_preserves_strict_fifo_restore_order(self):
+        """``restore_scan_limit=0`` pins the pre-scan contract: the failed
+        head blocks and nothing behind it restores first."""
+        from _fault_plane import drive
+        sched, plane = self._replica(
+            (("force_spill", 2, 0), ("force_spill", 2, 1),
+             ("fail_restore", 1, 0, 3)),
+            usable_pages=6, restore_scan_limit=0,
+        )
+        for i in range(2):
+            sched.submit(req(i, plen=6, max_new=8))
+        steps = drive(sched, plane, max_steps=200)
+        assert steps < 200 and not sched.has_work
+        assert sched.counters.get("restore_failures") == 3
+        assert sched.counters.get("second_chance_restores") == 0
         # FIFO preserved: 1 restores only after the failing head 0 clears
-        # (later pool pressure may spill/restore 1 again; only the order
-        # of the FIRST restores is the FIFO claim)
         restores = [e for e in plane.events if e[0] == "restore"]
         assert restores[0] == ("restore", 0)
         assert ("restore", 1) in restores

@@ -1,0 +1,540 @@
+"""Cross-replica swap migration + partial restore acceptance suite
+(marker: ``router``).
+
+The tentpole contract under test: **no request fails while any replica
+can host it**.  Swap records are portable (``Scheduler.export_swapped`` /
+``import_swapped`` over ``DataPlane.export_swap`` / ``import_swap``), so
+the router migrates starved or about-to-fail swap victims to replicas
+with headroom (``restore_migrations``), and a capacity-blocked FIFO head
+that out-waits ``restore_patience`` comes back as the longest
+page-aligned prefix that fits plus a re-prefilled tail
+(``partial_restores`` / ``pages_refilled``).  Every path is pinned to the
+fault-free closed-form token stream — migration and partial restore are
+timing policies, never token policies.
+
+Satellite leak audit: every terminal path for a spilled request —
+failed-as-unreachable, migration source, partial restore, plain drain —
+must leave the data plane holding NO swap record
+(``FaultyDataPlane.swapped_out`` / ``ContextSwitcher.swapped_out`` empty).
+"""
+
+import collections
+import copy
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # pragma: no cover
+    from _prop_fallback import given, settings, st
+
+from _fault_plane import (
+    drive,
+    drive_router,
+    expected_output,
+    make_replica,
+)
+from repro.serve import Replica, ReplicaRouter, ServeRequest, to_internal
+
+pytestmark = pytest.mark.router
+
+
+def req(i, plen=6, max_new=8, **kw):
+    return ServeRequest(req_id=i, prompt=np.arange(plen, dtype=np.int32),
+                        max_new_tokens=max_new, **kw)
+
+
+def make_router(n, schedules=None, per_replica=None, migrate=True,
+                migrate_after=2, **kw):
+    """N fault-plane replicas behind a migrating router.
+
+    ``per_replica``: optional dict of replica_id -> make_replica kwargs
+    overriding ``kw`` (heterogeneous pools)."""
+    replicas, planes = [], []
+    for r in range(n):
+        rkw = dict(kw)
+        rkw.update((per_replica or {}).get(r, {}))
+        sched, plane = make_replica(
+            replica_id=r, schedule=(schedules or {}).get(r, ()), **rkw
+        )
+        replicas.append(Replica(replica_id=r, scheduler=sched, plane=plane))
+        planes.append(plane)
+    return ReplicaRouter(replicas, migrate=migrate,
+                         migrate_after=migrate_after), planes
+
+
+def outputs(done):
+    return {rid: [int(x) for x in r.output] for rid, r in done.items()}
+
+
+def statuses(done):
+    return sorted((rid, r.status) for rid, r in done.items())
+
+
+def assert_no_swap_records(planes):
+    for i, plane in enumerate(planes):
+        assert plane.swapped_out == [], (
+            f"plane {i} leaked swap records: {plane.swapped_out}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# starvation migration: a capacity-starved victim moves to a replica with
+# immediate headroom instead of waiting out the source's outage
+# ---------------------------------------------------------------------------
+
+
+class TestStarvationMigration:
+    def _starved_pair(self, schedules_extra=(), migrate=True):
+        """Replica 0 spills req 0 at step 3 and a hog then holds its whole
+        pool for 60 steps; replica 1 idles with room to spare."""
+        schedules = {0: (("force_spill", 3, 0), ("hog", 3, 16, 60))
+                     + tuple(schedules_extra)}
+        router, planes = make_router(
+            2, schedules=schedules, migrate=migrate, migrate_after=2,
+            usable_pages=8, max_batch=2, max_horizon=1,
+        )
+        reqs = [req(0, plen=6, max_new=10), req(1, plen=6, max_new=4)]
+        for r in reqs:
+            router.submit(copy.deepcopy(r))
+        return router, planes, reqs
+
+    def test_starved_victim_migrates_and_completes_token_identically(self):
+        router, planes, reqs = self._starved_pair()
+        steps = drive_router(router, planes)
+        assert steps < 500 and not router.has_work
+        total = router.global_counters()
+        assert total["restore_migrations"] == 1
+        assert total["swap_exports"] == 1 and total["swap_imports"] == 1
+        assert total["failed_unreachable"] == 0
+        # the victim restored and finished on the DESTINATION plane
+        assert ("import_swap", 0) in planes[1].events
+        assert ("restore", 0) in planes[1].events
+        assert ("restore", 0) not in planes[0].events
+        # migration is a timing policy, never a token policy
+        assert outputs(router.done) == {
+            r.req_id: expected_output(r) for r in reqs
+        }
+        assert statuses(router.done) == [(0, "done"), (1, "done")]
+        assert_no_swap_records(planes)
+        router.check_invariants()
+        # the migrate snapshot names (victim, src, dest)
+        migs = [s.payload for s in router.counters.events("migrate")]
+        assert migs == [(0, 0, 1)]
+
+    def test_migration_off_waits_out_the_outage(self):
+        """The same starvation with ``migrate=False``: no export/import,
+        the victim just restores late at the source — the baseline the
+        benchmark gate diffs against."""
+        router, planes, reqs = self._starved_pair(migrate=False)
+        steps = drive_router(router, planes)
+        assert steps < 500 and not router.has_work
+        total = router.global_counters()
+        assert total["restore_migrations"] == 0
+        assert total["swap_exports"] == 0
+        assert ("restore", 0) in planes[0].events
+        assert outputs(router.done) == {
+            r.req_id: expected_output(r) for r in reqs
+        }
+        assert_no_swap_records(planes)
+        router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# rescue migration: the PR 2 "failed as unreachable" verdict survives only
+# when NO replica can host the pinned-prefix-adjusted demand
+# ---------------------------------------------------------------------------
+
+
+class TestRescueMigration:
+    def _stranded_on_small_replica(self, migrate):
+        """A victim whose spilled footprint exceeds the small replica's
+        whole pool, imported there scheduler-plane (modeling a historical
+        reach-blind placement): replica 0 can NEVER restore it, replica 1
+        can."""
+        router, planes = make_router(
+            2, migrate=migrate, migrate_after=2,
+            usable_pages=15, max_batch=2, max_horizon=1,
+            per_replica={0: {"usable_pages": 4, "max_pages": 8}},
+        )
+        # a short filler loads replica 0 so least-loaded places the victim
+        # on replica 1 in BOTH modes (with migrate=True the reach filter
+        # would route it there anyway)
+        router.submit(req(9, plen=4, max_new=2))
+        r = req(0, plen=11, max_new=8)
+        router.submit(copy.deepcopy(r))
+        s0 = router.replicas[0].scheduler
+        s1 = router.replicas[1].scheduler
+        assert router.counters.get("placements_replica1") == 1
+        # decode on replica 1 until the mapped footprint outgrows replica
+        # 0's entire pool, then strand the spilled record there
+        steps = 0
+        while not (0 in s1.running
+                   and s1.vmem.config.pages_for(s1.vmem.seq_len(0))
+                   > s0.attainable_pages()):
+            steps += 1
+            assert steps < 100
+            for p in planes:
+                p.tick(steps)
+            router.step()
+        s1.spill(s1.running[0])
+        s0.import_swapped(s1.export_swapped(0))
+        return router, planes, r
+
+    def test_rescue_migrates_instead_of_failing(self):
+        router, planes, r = self._stranded_on_small_replica(migrate=True)
+        assert drive_router(router, planes) < 500
+        total = router.global_counters()
+        assert total["restore_migrations"] == 1
+        assert total["failed_unreachable"] == 0
+        assert router.done[0].status == "done"
+        assert outputs(router.done)[0] == expected_output(r)
+        assert_no_swap_records(planes)
+        router.check_invariants()
+
+    def test_without_migration_the_unreachable_verdict_stands(self):
+        """migrate=False: the stranded victim is failed fast at the small
+        replica — and the leak audit's failed-unreachable path must
+        discard the host-side swap record."""
+        router, planes, r = self._stranded_on_small_replica(migrate=False)
+        assert drive_router(router, planes) < 500
+        total = router.global_counters()
+        assert total["restore_migrations"] == 0
+        assert total["failed_unreachable"] == 1
+        assert router.done[0].status == "failed"
+        assert ("discard", 0) in planes[0].events
+        assert_no_swap_records(planes)
+        router.check_invariants()
+
+    def test_reach_aware_placement_counts_redirects(self):
+        router, planes = make_router(
+            2, usable_pages=15, max_batch=2, max_horizon=1,
+            per_replica={0: {"usable_pages": 4, "max_pages": 8}},
+        )
+        # lifetime pf(11 + 7) = 5 pages > replica 0's 4: the least-loaded
+        # baseline (tie -> replica 0) must be overridden by reach
+        router.submit(req(0, plen=11, max_new=8))
+        assert router.counters.get("reach_redirects") == 1
+        assert router.counters.get("placements_replica1") == 1
+        assert drive_router(router, planes) < 500
+        assert router.global_counters()["failed_unreachable"] == 0
+        router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# migration faults: rejected imports, destinations filling mid-import,
+# victims retiring before the sweep reaches them
+# ---------------------------------------------------------------------------
+
+
+class TestMigrationFaults:
+    def test_rejected_import_rolls_back_at_source_head_then_retries(self):
+        """The destination plane rejects the first import (raised BEFORE
+        side effects): the router must re-import at the SOURCE HEAD
+        (FIFO unchanged), count ``migration_aborts``, and succeed on a
+        later sweep once the injection clears."""
+        schedules = {0: (("force_spill", 3, 0), ("hog", 3, 16, 60)),
+                     1: (("reject_import", 1, 0, 1),)}
+        router, planes = make_router(
+            2, schedules=schedules, migrate_after=2,
+            usable_pages=8, max_batch=2, max_horizon=1,
+        )
+        reqs = [req(0, plen=6, max_new=10), req(1, plen=6, max_new=4)]
+        for r in reqs:
+            router.submit(copy.deepcopy(r))
+        steps = drive_router(router, planes)
+        assert steps < 500 and not router.has_work
+        total = router.global_counters()
+        assert total["migration_aborts"] == 1
+        assert total["restore_migrations"] == 1
+        # abort path: export, rejected import, re-import at source, then
+        # the retried export/import pair
+        assert total["swap_exports"] == 2
+        assert total["swap_imports"] == 2
+        assert ("import_rejected", 0) in planes[1].events
+        assert outputs(router.done) == {
+            r.req_id: expected_output(r) for r in reqs
+        }
+        assert_no_swap_records(planes)
+        router.check_invariants()
+
+    def test_destination_fills_mid_import_blocks_then_restores_there(self):
+        """hog composed on the destination right after the migration
+        lands: the import succeeds but the restore is capacity-blocked at
+        the destination until the hog releases — degraded, never failed,
+        never migrated back to the still-hogged source."""
+        schedules = {0: (("force_spill", 3, 0), ("hog", 3, 16, 60)),
+                     1: (("hog", 6, 16, 12),)}
+        router, planes = make_router(
+            2, schedules=schedules, migrate_after=2,
+            usable_pages=8, max_batch=2, max_horizon=1,
+        )
+        reqs = [req(0, plen=6, max_new=10), req(1, plen=6, max_new=4)]
+        for r in reqs:
+            router.submit(copy.deepcopy(r))
+        steps = drive_router(router, planes)
+        assert steps < 500 and not router.has_work
+        total = router.global_counters()
+        assert total["restore_migrations"] == 1
+        assert total["failed_unreachable"] == 0
+        assert ("import_swap", 0) in planes[1].events
+        assert ("restore", 0) in planes[1].events
+        assert outputs(router.done) == {
+            r.req_id: expected_output(r) for r in reqs
+        }
+        assert_no_swap_records(planes)
+        router.check_invariants()
+
+    def test_export_of_a_retired_victim_raises_keyerror(self):
+        """'Victim retired during migration': the head-only sweep makes
+        the in-process race impossible, so the API contract is a hard
+        KeyError for any rid that is no longer swapped."""
+        sched, plane = make_replica(max_horizon=1)
+        sched.submit(to_internal(req(0, plen=6, max_new=4)))
+        drive(sched, plane)
+        assert sched.done[0].status == "done"
+        with pytest.raises(KeyError, match="not swapped"):
+            sched.export_swapped(0)
+
+
+# ---------------------------------------------------------------------------
+# partial restore: the longest page-aligned prefix that fits comes back
+# now, the evicted tail re-prefills through the continuation path
+# ---------------------------------------------------------------------------
+
+
+class TestPartialRestore:
+    def test_partial_restore_reprefills_tail_token_identically(self):
+        """Head blocked by a hog holding most (not all) of the pool:
+        after ``restore_patience`` blocked passes the victim returns as a
+        kept prefix + re-prefilled tail instead of waiting for the
+        all-or-nothing restore — same stream, no ``restores`` increment,
+        record consumed."""
+        sched, plane = make_replica(
+            page_size=4, usable_pages=8, max_pages=8, max_batch=2,
+            max_horizon=1, restore_patience=2,
+            schedule=(("force_spill", 4, 0), ("hog", 4, 6, 10)),
+        )
+        r = req(0, plen=8, max_new=8)
+        sched.submit(to_internal(r))
+        steps = drive(sched, plane, max_steps=300)
+        assert steps < 300 and not sched.has_work
+        assert sched.counters.get("partial_restores") == 1
+        assert sched.counters.get("pages_refilled") >= 1
+        assert sched.counters.get("restores") == 0    # never fully restored
+        assert sched.counters.get("failed_unreachable") == 0
+        # the partial restore re-mapped a page-aligned prefix via the
+        # plane (consuming the record) and re-prefilled the tail through
+        # the batched continuation dispatch
+        assert ("restore", 0) in plane.events
+        assert any(e[0] == "admit_forked_batch" for e in plane.events)
+        assert sched.done[0].status == "done"
+        assert [int(x) for x in sched.done[0].output] == expected_output(r)
+        assert plane.swapped_out == []
+        assert sched.state.partial_resume == {}
+        sched.vmem.check_invariants()
+
+    def test_patience_zero_disables_partial_restore(self):
+        sched, plane = make_replica(
+            page_size=4, usable_pages=8, max_pages=8, max_batch=2,
+            max_horizon=1, restore_patience=0,
+            schedule=(("force_spill", 4, 0), ("hog", 4, 6, 10)),
+        )
+        r = req(0, plen=8, max_new=8)
+        sched.submit(to_internal(r))
+        steps = drive(sched, plane, max_steps=300)
+        assert steps < 300 and not sched.has_work
+        assert sched.counters.get("partial_restores") == 0
+        assert sched.counters.get("restores") == 1    # waited out the hog
+        assert [int(x) for x in sched.done[0].output] == expected_output(r)
+        assert plane.swapped_out == []
+        sched.vmem.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# the headline property, migration enabled: token identity with the
+# fault-free N=1 reference + global accounting == replica sums
+# ---------------------------------------------------------------------------
+
+
+USABLE_PAGES = 8
+
+
+def gen_workload(rng):
+    n = int(rng.integers(2, 9))
+    return [req(i, plen=int(rng.integers(1, 13)),
+                max_new=int(rng.integers(1, 11))) for i in range(n)]
+
+
+def gen_faults(rng, reqs, steps_hi=30):
+    """Migration-heavy schedules: spills chased by pool-hogging windows
+    (the starvation shape), plus the PR 2 fault menagerie."""
+    events = []
+    rids = [r.req_id for r in reqs]
+    for _ in range(int(rng.integers(0, 5))):
+        kind = ["hog", "force_spill", "fail_restore", "delay_done",
+                "starve", "reject_import"][int(rng.integers(0, 6))]
+        step = int(rng.integers(1, steps_hi))
+        rid = int(rng.choice(rids))
+        if kind == "hog":
+            events.append(("hog", step, int(rng.integers(1, 4)),
+                           int(rng.integers(1, 7))))
+        elif kind == "force_spill":
+            events.append(("force_spill", step, rid))
+        elif kind == "fail_restore":
+            events.append(("fail_restore", step, rid,
+                           int(rng.integers(1, 4))))
+        elif kind == "delay_done":
+            events.append(("delay_done", step, rid,
+                           int(rng.integers(1, 4))))
+        elif kind == "starve":
+            events.append(("force_spill", step, rid))
+            events.append(("hog", step, USABLE_PAGES * 2,
+                           int(rng.integers(4, 16))))
+        else:
+            events.append(("reject_import", step, rid,
+                           int(rng.integers(1, 3))))
+    return tuple(events)
+
+
+class TestMigrationEnabledSweep:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_token_identity_and_accounting_with_migration(self, seed):
+        rng = np.random.default_rng(seed)
+        reqs = gen_workload(rng)
+
+        ref, ref_planes = make_router(1, usable_pages=USABLE_PAGES)
+        for r in reqs:
+            ref.submit(copy.deepcopy(r))
+        assert drive_router(ref, ref_planes) < 500
+        ref_done = dict(ref.done)
+        ref_out = outputs(ref_done)
+        assert ref_out == {r.req_id: expected_output(r) for r in reqs}
+
+        for n in (1, 2, 4):
+            schedules = {i: gen_faults(rng, reqs) for i in range(n)}
+            router, planes = make_router(n, schedules=schedules,
+                                         migrate_after=2,
+                                         usable_pages=USABLE_PAGES)
+            for r in reqs:
+                router.submit(copy.deepcopy(r))
+            steps = drive_router(router, planes)
+            assert steps < 500, f"N={n}: starvation (drive never drained)"
+            done = router.done
+            assert outputs(done) == ref_out, f"N={n} diverged"
+            assert statuses(done) == statuses(ref_done)
+            router.check_invariants()
+            # global accounting equals the sum of replica accounting,
+            # recomputed by hand (not via the router's own helper)
+            manual = collections.Counter()
+            for rep in router.replicas:
+                manual.update(rep.scheduler.counters.counters)
+            manual.update(router.counters.counters)
+            assert router.global_counters() == manual
+            # migration bookkeeping balances: every completed migration is
+            # one export/import pair, every abort adds a rollback import
+            total = router.global_counters()
+            assert total["swap_exports"] == (total["restore_migrations"]
+                                             + total["migration_aborts"])
+            assert total["swap_imports"] == total["swap_exports"]
+            # the leak audit, swept across every random schedule: no plane
+            # holds a swap record at drain
+            assert_no_swap_records(planes)
+            assert total["completed"] + total["failed_unreachable"] \
+                == len(reqs)
+            assert total["failed_unreachable"] == 0   # homogeneous fleet
+
+
+# ---------------------------------------------------------------------------
+# real engines: the leak audit on the REAL ContextSwitcher, and a rescue
+# migration moving actual KV page bytes between device pools
+# ---------------------------------------------------------------------------
+
+
+class TestRealEngineSwapRecords:
+    @pytest.fixture(scope="class")
+    def model_setup(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("qwen2-7b", reduced=True)
+        model = build_model(cfg, remat=False)
+        return cfg, model, model.init(jax.random.PRNGKey(0))
+
+    def test_switcher_holds_no_records_at_drain_under_preemption(
+            self, model_setup):
+        """Satellite leak audit on the real plane: a tight pool forces
+        spill/restore churn; at drain the ContextSwitcher must hold no
+        swap record (every spill was restored, exported or discarded)."""
+        from repro.serve import Engine, ServeConfig
+        cfg, model, params = model_setup
+        eng = Engine(model, params, ServeConfig(
+            page_size=4, num_pages=10, max_pages_per_seq=16, max_batch=3))
+        rng = np.random.default_rng(11)
+        reqs = [ServeRequest(
+            req_id=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(6, 11))
+                                ).astype(np.int32),
+            max_new_tokens=8) for i in range(5)]
+        for r in reqs:
+            eng.submit(copy.deepcopy(r))
+        done = eng.run()
+        assert all(r.status == "done" for r in done.values())
+        assert eng.counters.get("preemptions") > 0   # churn really happened
+        assert eng.switcher.swapped_out == []
+        eng.vmem.check_invariants()
+
+    def test_rescue_migration_moves_real_kv_between_pools(self, model_setup):
+        """A spilled victim stranded on a real small-pool replica is
+        rescued to the roomy replica — its exported host-side KV pages
+        re-enter the destination pool and greedy decode continues
+        token-identically to the untouched single-engine run."""
+        from repro.serve import Engine, ServeConfig
+        cfg, model, params = model_setup
+        big_cfg = ServeConfig(page_size=4, num_pages=64,
+                              max_pages_per_seq=32, max_batch=3,
+                              max_horizon=1)
+        small_cfg = ServeConfig(page_size=4, num_pages=8,
+                                max_pages_per_seq=8, max_batch=3,
+                                max_horizon=1)
+        rng = np.random.default_rng(7)
+        prompt = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        sreq = ServeRequest(req_id=0, prompt=prompt, max_new_tokens=8)
+
+        ref = Engine(model, params, big_cfg)
+        ref.submit(copy.deepcopy(sreq))
+        ref_out = [int(x) for x in ref.run()[0].output]
+
+        small = Engine(model, params, small_cfg)
+        big = Engine(model, params, big_cfg)
+        router = ReplicaRouter(
+            [small.as_replica(0), big.as_replica(1)], migrate_after=2)
+        router.submit(copy.deepcopy(sreq))
+        # lifetime pf(24 + 7) = 8 pages > the small replica's 7: the
+        # reach filter must place it on the roomy replica
+        assert router.counters.get("reach_redirects") == 1
+        assert router.counters.get("placements_replica1") == 1
+        s0, s1 = small.scheduler, big.scheduler
+        steps = 0
+        while not (0 in s1.running
+                   and s1.vmem.config.pages_for(s1.vmem.seq_len(0))
+                   > s0.attainable_pages()):
+            steps += 1
+            assert steps < 100
+            router.step()
+        s1.spill(s1.running[0])
+        s0.import_swapped(s1.export_swapped(0))     # strand it: real bytes
+        assert small.switcher.swapped_out == [0]
+        done = router.run()
+        assert router.counters.get("restore_migrations") == 1
+        assert router.global_counters()["failed_unreachable"] == 0
+        assert done[0].status == "done"
+        assert [int(x) for x in done[0].output] == ref_out
+        assert small.switcher.swapped_out == []
+        assert big.switcher.swapped_out == []
+        router.check_invariants()
